@@ -1,0 +1,12 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  cnn_table         -> Tab. I   (network structure + params + FLOPs)
+  addtree_resources -> §III.B.1 (odd-even vs classic tree resources)
+  window_pipeline   -> Fig. 7/8 (fill latency, II=1, reuse ratio, bytes)
+  batch_sweep       -> Fig. 9   (batch-size sweep, latency/throughput)
+  gops_table        -> Tab. III (GOPS / GOPS/W, TPU-v5e roofline projection)
+  roofline_table    -> EXPERIMENTS.md §Roofline aggregator (dry-run JSONs)
+
+``python -m benchmarks.run`` executes all and prints
+``name,us_per_call,derived`` CSV rows.
+"""

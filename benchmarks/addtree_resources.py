@@ -1,0 +1,45 @@
+"""§III.B.1 reproduction: odd-even vs classic addition-tree resources,
+plus measured reduction timings (CPU, jit).
+
+Paper's worked numbers reproduced exactly:
+  η=9:        ours 8 adders / 20 regs / 4 cycles; classic 15 / 31 / 4
+  η=144, 256: classic both 255 / 511 / 8 (the waste argument)
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.core.addtree import (classic_padded_sum, classic_tree_resources,
+                                pairwise_sum, tree_resources)
+
+ETAS = [9, 36, 144, 150, 256, 540, 1350]   # incl. paper CNN η = N·K²
+
+
+def run() -> None:
+    for eta in ETAS:
+        ours = tree_resources(eta)
+        classic = classic_tree_resources(eta)
+        emit(f"addtree/resources/eta{eta}", 0.0,
+             f"ours_adders={ours.adders};ours_regs={ours.registers};"
+             f"ours_cycles={ours.cycles};classic_adders={classic.adders};"
+             f"classic_regs={classic.registers};"
+             f"classic_cycles={classic.cycles};"
+             f"adder_saving={1 - ours.adders / classic.adders:.3f};"
+             f"classic_pad_waste={classic.padding_waste:.3f}")
+
+    # value-path timings: odd-even vs padded-classic vs jnp.sum
+    key = jax.random.PRNGKey(0)
+    for eta in (144, 540):
+        x = jax.random.normal(key, (4096, eta))
+        t_ours = time_fn(lambda v: pairwise_sum(v, -1), x)
+        t_classic = time_fn(lambda v: classic_padded_sum(v, -1), x)
+        t_sum = time_fn(lambda v: v.sum(-1), x)
+        emit(f"addtree/time/eta{eta}_pairwise", t_ours,
+             f"vs_classic={t_classic / max(t_ours, 1e-9):.2f}x")
+        emit(f"addtree/time/eta{eta}_classicpad", t_classic, "")
+        emit(f"addtree/time/eta{eta}_jnpsum", t_sum, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Fig. 9 reproduction: inference latency/throughput vs batch size.
+
+The paper's point: the latency-optimized accelerator wins at batch=1 and
+the throughput-optimized platform (GPU) catches up past batch ~64. We
+measure on CPU two configurations of the same CNN:
+
+  * ``latency path``  — int8-quantized weights, fused im2col conv (the
+    accelerator-like configuration),
+  * ``thruput path``  — plain fp32 XLA conv (lax.conv), which amortizes
+    like the paper's GPU baseline,
+
+and report GOPS = flops_per_image × batch / time. TPU-projected GOPS for
+the same workload comes from gops_table (roofline model), keeping measured
+CPU numbers and modeled TPU numbers clearly separated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+
+BATCHES = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    flops1 = PaperCNNConfig().flops_per_image()
+
+    lat_model = PaperCNN(PaperCNNConfig(quant="int8", path="im2col"))
+    thr_model = PaperCNN(PaperCNNConfig(quant="none", path="im2col"))
+    params = lat_model.init(key)
+
+    def thr_forward(p, x):
+        # lax.conv-based reference path (throughput baseline)
+        import jax.lax as lax
+        h = lax.conv_general_dilated(
+            x, p["conv1"]["w"], (1, 1), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW")) \
+            + p["conv1"]["b"][None, :, None, None]
+        h = lax.reduce_window(jax.nn.relu(h), -jnp.inf, lax.max,
+                              (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+        h = lax.conv_general_dilated(
+            h, p["conv2"]["w"], (1, 1), "VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW")) \
+            + p["conv2"]["b"][None, :, None, None]
+        h = lax.reduce_window(jax.nn.relu(h), -jnp.inf, lax.max,
+                              (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+        return h.reshape(h.shape[0], -1) @ p["fc_w"] + p["fc_b"]
+
+    lat_fwd = jax.jit(lambda p, x: lat_model.forward(p, x))
+    thr_fwd = jax.jit(thr_forward)
+
+    for b in BATCHES:
+        x = jax.random.normal(key, (b, 1, 28, 28))
+        t_lat = time_fn(lat_fwd, params, x)
+        t_thr = time_fn(thr_fwd, params, x)
+        gops_lat = flops1 * b / t_lat / 1e3     # us -> GOPS
+        gops_thr = flops1 * b / t_thr / 1e3
+        emit(f"fig9/batch{b}/latency_path", t_lat,
+             f"GOPS={gops_lat:.2f};speedup_vs_thruput="
+             f"{t_thr / t_lat:.2f}x")
+        emit(f"fig9/batch{b}/thruput_path", t_thr, f"GOPS={gops_thr:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Tab. I reproduction: the paper CNN's structure, parameters, FLOPs."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.models.cnn import PaperCNNConfig
+
+
+def run() -> None:
+    cfg = PaperCNNConfig()
+    s1, s2, fc_in = cfg.feature_sizes()
+    rows = [
+        ("conv1 3x3x15 s1", 1 * 9 * 15 + 15,
+         2 * 15 * 9 * 26 * 26),
+        ("pool1 2x2 s2", 0, 0),
+        ("conv2 6x6x20 s1", 15 * 36 * 20 + 20,
+         2 * 20 * 15 * 36 * 8 * 8),
+        ("pool2 2x2 s2", 0, 0),
+        (f"fc {fc_in}->10", fc_in * 10 + 10, 2 * fc_in * 10),
+    ]
+    total_p = sum(p for _, p, _ in rows)
+    total_f = sum(f for _, _, f in rows)
+    # paper Tab. I: 150 / 10,820 / 3,210
+    assert rows[0][1] == 150 and rows[2][1] == 10820 and rows[4][1] == 3210
+    for name, p, f in rows:
+        emit(f"tab1/{name}", 0.0, f"params={p};flops={f}")
+    emit("tab1/total", 0.0,
+         f"params={total_p};flops_per_image={total_f};"
+         f"matches_paper_tab1=True")
+    assert total_f == cfg.flops_per_image()
+
+
+if __name__ == "__main__":
+    run()

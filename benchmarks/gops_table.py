@@ -1,0 +1,72 @@
+"""Tab. III reproduction/extension: GOPS and GOPS/W across platforms.
+
+Paper rows are quoted verbatim. Our row is a TPU-v5e ROOFLINE PROJECTION
+for the same CNN workload (batch=1 latency regime, int8 datapath): the
+conv layers are memory-bound at this size, so projected time =
+max(compute, memory) from the analytic byte/flop counts, and
+GOPS = flops / time. Power model: 215 W/chip board power (documented
+assumption — Google does not publish a v5e TDP; derived from the public
+"1.9× perf/W vs v4" claim and v4's ~192 W). Measured-CPU rows come from
+benchmarks.batch_sweep; numbers here are the projection model.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.launch.roofline import HW
+from repro.models.cnn import PaperCNNConfig
+
+V5E_WATTS = 215.0
+
+PAPER_ROWS = [
+    # platform, freq MHz, DSPs, quant, power W, GOPS, GOPS/W
+    ("paper[7]_ZynqXC7Z045", 150, 780, "16b fixed", 9.63, 136.97, 14.22),
+    ("paper[11]_ZynqXC7Z045", 100, 824, "16b fixed", 9.40, 229.50, 24.42),
+    ("paper[12]_Virtex7_690T", 150, 1376, "16b fixed", 25.0, 570.00, 22.80),
+    ("paper_this_CycloneV", 100, 342, "16b fixed", 9.711, 317.86, 32.73),
+]
+
+
+def _cnn_projection() -> tuple[float, float, float]:
+    """(flops, bytes, projected GOPS) for one image, int8 path on v5e."""
+    cfg = PaperCNNConfig()
+    flops = cfg.flops_per_image()
+    # bytes: window-stationary — each input/weight/output element moves once
+    s1, s2, fc_in = cfg.feature_sizes()
+    o1 = cfg.img_size - cfg.conv1_k + 1
+    b = 0
+    b += (1 * 28 * 28 + 15 * 9 + 15 * o1 * o1)           # conv1 (int8=1B)
+    b += (15 * s1 * s1 + 20 * 15 * 36 + 20 * 8 * 8)      # conv2
+    b += (fc_in + fc_in * 10 + 10)                       # fc
+    t_compute = flops / HW.PEAK_FLOPS_INT8
+    t_memory = b / HW.HBM_BW
+    t = max(t_compute, t_memory)
+    return flops, b, flops / t / 1e9
+
+
+def run() -> None:
+    for name, mhz, dsps, quant, watts, gops, gopsw in PAPER_ROWS:
+        emit(f"tab3/{name}", 0.0,
+             f"freq={mhz}MHz;dsp={dsps};quant={quant};power={watts}W;"
+             f"GOPS={gops};GOPSperW={gopsw}")
+        if name == "paper_this_CycloneV":
+            # paper's headline claims, validated as stated:
+            best_other = max(r[6] for r in PAPER_ROWS[:-1])
+            emit("tab3/paper_claim_check", 0.0,
+                 f"eff_gain_vs_best={gopsw / best_other:.3f}"
+                 f";paper_claims=1.34;consistent="
+                 f"{abs(gopsw / best_other - 1.34) < 0.01}")
+
+    flops, nbytes, gops = _cnn_projection()
+    emit("tab3/ours_tpu_v5e_projection", 0.0,
+         f"quant=int8;power={V5E_WATTS}W;GOPS={gops:.1f};"
+         f"GOPSperW={gops / V5E_WATTS:.2f};"
+         f"note=batch1_roofline_projection;flops={flops};bytes={nbytes}")
+    # the paper CNN at batch=1 is tiny: HBM-latency-bound in practice; the
+    # projection is the bandwidth bound, i.e. an upper bound — stated as such.
+    emit("tab3/ours_note", 0.0,
+         "projection_is_bandwidth_bound_upper_bound;"
+         "real_batch1_latency_would_be_launch-latency-bound_on_TPU")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""§Roofline aggregator: render the per-(arch × shape) roofline table from
+the dry-run JSON reports (reports/dryrun/)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+REPORTS = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+def rows(mesh: str = "pod16x16", tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(REPORTS, f"{mesh}__*.json"))):
+        d = json.load(open(f))
+        if d.get("tag", "") != tag:
+            continue
+        out.append(d)
+    return out
+
+
+def run() -> None:
+    got = rows()
+    if not got:
+        emit("roofline/none", 0.0, "no dry-run reports found; run "
+             "python -m repro.launch.dryrun first")
+        return
+    for d in got:
+        if d["status"] == "skipped":
+            emit(f"roofline/{d['arch']}/{d['shape']}", 0.0,
+                 f"SKIPPED:{d['reason'][:80]}")
+            continue
+        if d["status"] != "ok":
+            emit(f"roofline/{d['arch']}/{d['shape']}", 0.0,
+                 f"ERROR:{d.get('error', '')[:80]}")
+            continue
+        r = d["roofline"]
+        pk = d.get("memory_analysis", {}).get("peak_bytes_per_device", 0)
+        emit(f"roofline/{d['arch']}/{d['shape']}",
+             r["step_time_s"] * 1e6,
+             f"bottleneck={r['bottleneck']};compute_s={r['compute_s']:.3e};"
+             f"memory_s={r['memory_s']:.3e};"
+             f"collective_s={r['collective_s']:.3e};"
+             f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+             f"mfu={r['mfu']:.4f};peak_GiB={pk / 2**30:.2f}")
+
+
+if __name__ == "__main__":
+    run()

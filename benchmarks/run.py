@@ -1,0 +1,21 @@
+"""Run every paper-table benchmark. Prints ``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (addtree_resources, batch_sweep, cnn_table,
+                            gops_table, roofline_table, window_pipeline)
+    for mod in (cnn_table, addtree_resources, window_pipeline, batch_sweep,
+                gops_table, roofline_table):
+        try:
+            mod.run()
+        except Exception:
+            print(f"{mod.__name__},0.0,ERROR")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

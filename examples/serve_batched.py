@@ -1,0 +1,71 @@
+"""End-to-end driver #2 (the paper's operating point, Fig. 9): serve a small
+LM with batched requests — prefill + greedy decode with a KV cache — and
+sweep the batch size, reporting per-request latency and total throughput.
+The paper's finding (latency engine wins at batch=1, throughput amortizes
+at large batch) shows up as the tokens/s-vs-latency trade.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--decode-steps 32]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LMConfig, TransformerLM
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--batches", type=int, nargs="*",
+                    default=[1, 2, 4, 8, 16])
+    args = ap.parse_args()
+
+    cfg = LMConfig(name="serve-demo", n_layers=4, d_model=256, n_heads=8,
+                   n_kv_heads=4, d_ff=1024, vocab=512, dtype=jnp.float32,
+                   remat="none")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model))
+    max_seq = args.prompt_len + args.decode_steps
+
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params | "
+          f"prompt {args.prompt_len} | decode {args.decode_steps}")
+    print(f"{'batch':>6} {'prefill_ms':>11} {'ms/token':>9} "
+          f"{'tok/s':>8} {'ms/request':>11}")
+    for b in args.batches:
+        toks = jax.random.randint(jax.random.PRNGKey(b),
+                                  (b, args.prompt_len), 0, cfg.vocab)
+        cache = model.init_cache(b, max_seq)
+        # warmup compile
+        t, c = prefill(params, {"tokens": toks}, cache)
+        t, c = decode(params, t, jnp.asarray(args.prompt_len, jnp.int32), c)
+        jax.block_until_ready(t)
+
+        cache = model.init_cache(b, max_seq)
+        t0 = time.perf_counter()
+        tok, cache = prefill(params, {"tokens": toks}, cache)
+        jax.block_until_ready(tok)
+        t_prefill = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        for i in range(args.decode_steps):
+            tok, cache = decode(params, tok,
+                                jnp.asarray(args.prompt_len + i, jnp.int32),
+                                cache)
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t1
+
+        ms_tok = t_decode / args.decode_steps * 1e3
+        tput = b * args.decode_steps / t_decode
+        total = (t_prefill + t_decode) * 1e3
+        print(f"{b:6d} {t_prefill * 1e3:11.1f} {ms_tok:9.2f} "
+              f"{tput:8.1f} {total:11.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""§Perf hillclimb driver: run tagged variants of the three chosen cells.
+
+Each variant is one hypothesis -> change -> measure iteration; results land
+in reports/dryrun/ as tagged JSONs and are summarized to stdout. See
+EXPERIMENTS.md §Perf for the narrative log.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.dryrun import run_cell  # noqa: E402  (sets XLA_FLAGS first)
+
+PURE_DP = {
+    "batch": [("data", "model")], "attn_batch": [("data", "model")],
+    "heads": [], "kv_heads": [], "mlp": [], "vocab": [],
+    "act_heads": [], "act_kv": [], "act_mlp": [], "act_vocab": [],
+}
+ATTN_BATCH = {"act_seq": [],
+              "attn_batch": [("data", "model"), ("pod", "data"), "data"]}
+
+VARIANTS = [
+    # (arch, shape, tag, kwargs)
+    ("qwen1.5-0.5b", "train_4k", "opt1_mb1", dict(microbatches=1)),
+    ("qwen1.5-0.5b", "train_4k", "opt2_puredp",
+     dict(microbatches=1, rule_patch=PURE_DP)),
+    ("qwen1.5-0.5b", "train_4k", "opt3_puredp_dots",
+     dict(microbatches=1, rule_patch=PURE_DP,
+          config_patch={"remat": "dots"})),
+    ("qwen3-14b", "train_4k", "opt1_attnbatch", dict(rule_patch=ATTN_BATCH)),
+    ("qwen3-14b", "train_4k", "opt2_attnbatch_mb4",
+     dict(rule_patch=ATTN_BATCH, microbatches=4)),
+    ("qwen3-14b", "train_4k", "opt3_attnbatch_mb4_dots",
+     dict(rule_patch=ATTN_BATCH, microbatches=4,
+          config_patch={"remat": "dots"})),
+    ("zamba2-7b", "train_4k", "opt1_chunk128",
+     dict(config_patch={"mamba_chunk": 128})),
+    ("zamba2-7b", "train_4k", "opt2_mb4", dict(microbatches=4)),
+    ("zamba2-7b", "train_4k", "opt3_chunk128_mb4",
+     dict(config_patch={"mamba_chunk": 128}, microbatches=4)),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for arch, shape, tag, kw in VARIANTS:
+        if only and only not in tag and only not in arch:
+            continue
+        rec = run_cell(arch, shape, multi_pod=False, tag=tag, **kw)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            pk = rec["memory_analysis"].get("peak_bytes_per_device", 0) / 2**30
+            print(f"{arch} × {shape} [{tag}]: "
+                  f"compute={r['compute_s']:.3e} memory={r['memory_s']:.3e} "
+                  f"coll={r['collective_s']:.3e} step={r['step_time_s']:.3e} "
+                  f"mfu={r['mfu']:.4f} peak={pk:.2f}GiB", flush=True)
+        else:
+            print(f"{arch} × {shape} [{tag}]: {rec['status']} "
+                  f"{rec.get('error', '')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

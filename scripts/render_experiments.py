@@ -1,0 +1,116 @@
+"""Render §Dry-run and §Roofline tables into EXPERIMENTS.md from
+reports/dryrun/*.json (between the HTML marker comments)."""
+import glob
+import json
+import re
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+REPORTS = ROOT / "reports" / "dryrun"
+
+ARCH_ORDER = ["dbrx-132b", "llama4-scout-17b-a16e", "qwen1.5-0.5b",
+              "command-r-35b", "qwen3-14b", "gemma2-2b", "internvl2-26b",
+              "seamless-m4t-medium", "zamba2-7b", "rwkv6-1.6b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh, tag=""):
+    out = {}
+    for f in glob.glob(str(REPORTS / f"{mesh}__*.json")):
+        d = json.load(open(f))
+        if d.get("tag", "") != tag:
+            continue
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def dryrun_table():
+    single = load("pod16x16")
+    multi = load("pod2x16x16")
+    lines = ["| arch | shape | 16×16 compile | peak GiB | 2×16×16 compile |"
+             " peak GiB | collectives (16×16, count) |",
+             "|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = single.get((a, s))
+            m = multi.get((a, s))
+            if d is None:
+                continue
+            if d["status"] == "skipped":
+                lines.append(f"| {a} | {s} | SKIP | — | SKIP | — |"
+                             f" {d['reason'][:60]}… |")
+                continue
+            if d["status"] != "ok":
+                lines.append(f"| {a} | {s} | ERROR | — | — | — |"
+                             f" {d.get('error', '')[:60]} |")
+                continue
+            pk = d["memory_analysis"].get("peak_bytes_per_device", 0) / 2**30
+            coll = ", ".join(f"{k}×{int(v)}" for k, v in sorted(
+                d["collectives"]["count_by_op"].items()))
+            if m is not None and m["status"] == "ok":
+                mpk = m["memory_analysis"].get("peak_bytes_per_device",
+                                               0) / 2**30
+                mtxt = f"✓ {m['compile_s']}s"
+                mpk_txt = f"{mpk:.1f}"
+            elif m is not None and m["status"] == "skipped":
+                mtxt, mpk_txt = "SKIP", "—"
+            else:
+                mtxt = "ERROR" if m is not None else "(pending)"
+                mpk_txt = "—"
+            lines.append(f"| {a} | {s} | ✓ {d['compile_s']}s | {pk:.1f} |"
+                         f" {mtxt} | {mpk_txt} | {coll} |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    single = load("pod16x16")
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) |"
+             " bottleneck | useful | MFU | peak GiB | next lever |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    LEVERS = {
+        "memory": "cut re-read traffic (μb count, weight dtype, fused"
+                  " reads)",
+        "collective": "reshard (TP↔DP), cast-before-gather, overlap",
+        "compute": "less remat recompute / larger per-chip tiles",
+    }
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = single.get((a, s))
+            if d is None or d["status"] != "ok":
+                if d is not None and d["status"] == "skipped":
+                    lines.append(f"| {a} | {s} | — | — | — | SKIPPED |"
+                                 f" — | — | — | (sub-quadratic archs only) |")
+                continue
+            r = d["roofline"]
+            pk = d["memory_analysis"].get("peak_bytes_per_device", 0) / 2**30
+            lines.append(
+                f"| {a} | {s} | {fmt_s(r['compute_s'])} |"
+                f" {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} |"
+                f" {r['bottleneck']} | {r['useful_flops_ratio']:.2f} |"
+                f" {r['mfu']:.3f} | {pk:.1f} |"
+                f" {LEVERS[r['bottleneck']]} |")
+    return "\n".join(lines)
+
+
+def splice(text, begin, end, payload):
+    pat = re.compile(re.escape(begin) + ".*?" + re.escape(end), re.S)
+    return pat.sub(begin + "\n" + payload + "\n" + end, text)
+
+
+def main():
+    p = ROOT / "EXPERIMENTS.md"
+    text = p.read_text()
+    text = splice(text, "<!-- DRYRUN:BEGIN -->", "<!-- DRYRUN:END -->",
+                  dryrun_table())
+    text = splice(text, "<!-- ROOFLINE:BEGIN -->", "<!-- ROOFLINE:END -->",
+                  roofline_table())
+    p.write_text(text)
+    print("EXPERIMENTS.md tables rendered")
+
+
+if __name__ == "__main__":
+    main()

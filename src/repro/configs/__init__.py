@@ -1,0 +1,6 @@
+"""Per-architecture configs (the assigned pool) + the paper's CNN.
+
+Each arch module exposes ``ARCH: ArchSpec``; the registry maps ids to
+specs. Shapes are the assigned 4-cell set per arch (see configs.base).
+"""
+from repro.configs.registry import ARCH_IDS, SHAPE_IDS, get_arch

@@ -1,0 +1,151 @@
+"""ArchSpec: one assigned architecture = model builder + per-shape specs.
+
+Shapes (LM family, assigned):
+  train_4k     seq 4096,   global_batch 256  -> lowers train_step
+  prefill_32k  seq 32768,  global_batch 32   -> lowers prefill serve_step
+  decode_32k   seq 32768,  global_batch 128  -> lowers decode serve_step
+                                               (1 new token, KV cache = seq)
+  long_500k    seq 524288, global_batch 1    -> decode; ONLY for sub-quadratic
+                                               archs (zamba2, rwkv6) — others
+                                               skip with a reason string.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import A
+
+__all__ = ["SHAPES", "ArchSpec", "lm_inputs"]
+
+# shape id -> (kind, seq_len, global_batch)
+SHAPES: dict[str, tuple[str, int, int]] = {
+    "train_4k": ("train", 4_096, 256),
+    "prefill_32k": ("prefill", 32_768, 32),
+    "decode_32k": ("decode", 32_768, 128),
+    "long_500k": ("decode", 524_288, 1),
+}
+
+_I32 = jnp.int32
+_MODEL_CACHE: dict[str, Any] = {}
+
+
+def _tok(b: int, s: int):
+    return jax.ShapeDtypeStruct((b, s), _I32)
+
+
+def lm_inputs(kind: str, seq: int, batch: int, *,
+              vision_patches: int = 0, d_model: int = 0,
+              frames: bool = False, dec_frac: int = 4,
+              dtype=jnp.bfloat16):
+    """Standard LM input specs + logical axes for one shape cell.
+
+    vision_patches > 0: VLM — (batch, P, d_model) embeddings prepended, text
+    tokens shortened so total seq stays `seq`.
+    frames=True: enc-dec — encoder gets (batch, seq, d_model) stub frame
+    embeddings, decoder tokens are seq // dec_frac (min 128).
+    """
+    if frames:
+        s_dec = max(seq // dec_frac, 128)
+        if kind == "train":
+            specs = {"frames": jax.ShapeDtypeStruct((batch, seq, d_model),
+                                                    dtype),
+                     "tokens": _tok(batch, s_dec),
+                     "labels": _tok(batch, s_dec)}
+            axes = {"frames": A("batch", "act_seq", None),
+                    "tokens": A("batch", "act_seq"),
+                    "labels": A("batch", "act_seq")}
+        elif kind == "prefill":
+            specs = {"frames": jax.ShapeDtypeStruct((batch, seq, d_model),
+                                                    dtype),
+                     "tokens": _tok(batch, s_dec)}
+            axes = {"frames": A("batch", "act_seq", None),
+                    "tokens": A("batch", "act_seq")}
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((batch,), _I32),
+                     "pos": jax.ShapeDtypeStruct((), _I32)}
+            axes = {"tokens": A("batch"), "pos": A()}
+        return specs, axes
+
+    if vision_patches and kind in ("train", "prefill"):
+        s_text = seq - vision_patches
+        specs = {"tokens": _tok(batch, s_text),
+                 "vision_embeds": jax.ShapeDtypeStruct(
+                     (batch, vision_patches, d_model), dtype)}
+        axes = {"tokens": A("batch", "act_seq"),
+                "vision_embeds": A("batch", "act_seq", None)}
+        if kind == "train":
+            specs["labels"] = _tok(batch, s_text)
+            axes["labels"] = A("batch", "act_seq")
+        return specs, axes
+
+    if kind == "train":
+        return ({"tokens": _tok(batch, seq), "labels": _tok(batch, seq)},
+                {"tokens": A("batch", "act_seq"),
+                 "labels": A("batch", "act_seq")})
+    if kind == "prefill":
+        return ({"tokens": _tok(batch, seq)},
+                {"tokens": A("batch", "act_seq")})
+    # decode
+    return ({"tokens": jax.ShapeDtypeStruct((batch,), _I32),
+             "pos": jax.ShapeDtypeStruct((), _I32)},
+            {"tokens": A("batch"), "pos": A()})
+
+
+@dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                       # moe|dense|vlm|audio|hybrid|ssm
+    build: Callable[[], Any]          # -> model instance
+    source: str                       # provenance note
+    notes: str = ""
+    vision_patches: int = 0
+    frames: bool = False
+    dec_frac: int = 4
+    subquadratic: bool = False        # runs long_500k
+    cache_seq_divisor: int = 1        # enc-dec: self cache = seq // divisor
+    # extra sharding-rule entries for this arch, merged over the defaults —
+    # e.g. gemma2's 8 heads cannot split over model=16, so its activations
+    # shard the sequence dim over 'model' instead (sequence parallelism).
+    rule_overrides: dict | None = None
+
+    def model(self):
+        m = _MODEL_CACHE.get(self.arch_id)
+        if m is None:
+            m = _MODEL_CACHE[self.arch_id] = self.build()
+        return m
+
+    def skip_reason(self, shape_id: str) -> str | None:
+        if shape_id == "long_500k" and not self.subquadratic:
+            return ("full-attention arch: 500k decode needs a quadratic-"
+                    "memory KV pass per global layer — skipped per task "
+                    "spec (see DESIGN.md §5)")
+        return None
+
+    def input_specs(self, shape_id: str):
+        """-> (kind, specs dict, axes dict, seq, batch)."""
+        kind, seq, batch = SHAPES[shape_id]
+        m = self.model()
+        d = getattr(m.cfg, "d_model", 0)
+        specs, axes = lm_inputs(kind, seq, batch,
+                                vision_patches=self.vision_patches,
+                                d_model=d, frames=self.frames,
+                                dec_frac=self.dec_frac,
+                                dtype=getattr(m.cfg, "dtype", jnp.bfloat16))
+        return kind, specs, axes, seq, batch
+
+    def cache_specs(self, shape_id: str):
+        """ShapeDtypeStructs + axes for the serve cache of a decode cell."""
+        kind, seq, batch = SHAPES[shape_id]
+        m = self.model()
+        if self.frames:
+            s_dec = max(seq // self.dec_frac, 128)
+            shapes = jax.eval_shape(
+                lambda: m.init_cache(batch, s_dec, enc_seq=seq))
+        else:
+            shapes = jax.eval_shape(lambda: m.init_cache(batch, seq))
+        return shapes, m.cache_axes()

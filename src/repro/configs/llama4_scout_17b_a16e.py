@@ -1,0 +1,30 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1 + 1 shared expert, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig, TransformerLM
+
+CONFIG = LMConfig(
+    name="llama4-scout-17b-a16e",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=202048,
+    moe=MoEConfig(d_model=5120, d_ff=8192, n_experts=16, top_k=1,
+                  n_shared=1, capacity_factor=1.25, act="silu", gated=True),
+    act="silu", gated=True, rope_theta=500_000.0,
+    tie_embeddings=False, dtype=jnp.bfloat16, remat="full",
+)
+
+ARCH = ArchSpec(
+    arch_id="llama4-scout-17b-a16e", family="moe",
+    build=lambda: TransformerLM(CONFIG),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    notes=("MoE top-1 + shared expert. Early-fusion multimodality is a "
+           "frontend concern; text backbone modeled (task-spec stub rule). "
+           "40 heads % model=16 != 0 ⇒ activations shard seq over 'model' "
+           "(sequence parallelism)."),
+    rule_overrides={"act_seq": ["model"]},
+)

@@ -1,0 +1,16 @@
+"""The paper's own workload (Tab. I): LeNet-style MNIST CNN on core.conv.
+
+Not part of the assigned 40-cell pool; used by the examples, the paper-
+faithful benchmarks (Fig. 9, Tab. III) and the quantization validation.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+
+CONFIG = PaperCNNConfig()
+
+ARCH = ArchSpec(
+    arch_id="mnist_cnn", family="cnn",
+    build=lambda: PaperCNN(CONFIG),
+    source="paper Tab. I",
+    notes="conv 3x3x15 -> pool -> conv 6x6x20 -> pool -> fc10; 14,180 params.",
+)

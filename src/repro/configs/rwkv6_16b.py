@@ -1,0 +1,24 @@
+"""rwkv6-1.6b [ssm] — Finch: 24L d_model=2048 (attention-free)
+d_ff=7168 vocab=65536, data-dependent decay. [arXiv:2404.05892; unverified]
+
+O(1)-state decode -> runs long_500k.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.rwkv_lm import RWKVLM, RWKVLMConfig
+
+CONFIG = RWKVLMConfig(
+    name="rwkv6-1.6b",
+    n_layers=24, d_model=2048, d_ff=7168, vocab=65536,
+    head_dim=64, chunk=64, dtype=jnp.bfloat16, remat="full",
+)
+
+ARCH = ArchSpec(
+    arch_id="rwkv6-1.6b", family="ssm",
+    build=lambda: RWKVLM(CONFIG),
+    source="arXiv:2404.05892; unverified",
+    subquadratic=True,
+    notes=("Token shift = K=2 causal window (paper C3 degenerate form); "
+           "decode state is O(1) in sequence length."),
+)

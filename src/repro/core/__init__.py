@@ -1,0 +1,31 @@
+"""Core: the paper's contributions (C1–C4) as composable JAX modules.
+
+See DESIGN.md §1–2. Public surface:
+  addtree      — odd-even reduction tree + resource models (C2)
+  window       — window pipeline laws, line-buffer simulator, conv oracles (C3)
+  conv         — Conv2D / causal Conv1D modules (C1+C2+C3+C4 composed)
+  parallelism  — input/output-channel-parallel distributed schedules (C1)
+  quantize     — Qm.n fixed point + int8 per-channel quantization (C4)
+"""
+from repro.core.addtree import (classic_padded_sum, classic_tree_resources,
+                                level_widths, pairwise_sum, tree_resources)
+from repro.core.conv import (Conv2DConfig, causal_conv1d, causal_conv1d_step,
+                             conv2d_apply, conv2d_init)
+from repro.core.parallelism import ChannelParallelism, conv2d_channel_parallel
+from repro.core.quantize import (QFormat, QTensor, dequantize_int8,
+                                 fake_quant_int8, quantize_int8, quantize_tree)
+from repro.core.window import (LineBufferSim, conv2d_im2col, conv2d_ref,
+                               conv_output_size, extract_windows,
+                               fill_latency, reuse_ratio)
+
+__all__ = [
+    "classic_padded_sum", "classic_tree_resources", "level_widths",
+    "pairwise_sum", "tree_resources",
+    "Conv2DConfig", "causal_conv1d", "causal_conv1d_step",
+    "conv2d_apply", "conv2d_init",
+    "ChannelParallelism", "conv2d_channel_parallel",
+    "QFormat", "QTensor", "dequantize_int8", "fake_quant_int8",
+    "quantize_int8", "quantize_tree",
+    "LineBufferSim", "conv2d_im2col", "conv2d_ref", "conv_output_size",
+    "extract_windows", "fill_latency", "reuse_ratio",
+]

@@ -1,0 +1,150 @@
+"""Odd-even (fully parallel) multiplication-addition tree — paper §III.B.1.
+
+The paper's C2 contribution: a pairwise reduction tree for an arbitrary
+number of addends ``eta`` that does NOT zero-pad up to ``2**ceil(log2(eta))``.
+Each level adds adjacent pairs; if the level has an odd count, the last
+element is forwarded unchanged to the next level, so the level width goes
+``eta -> ceil(eta/2) -> ... -> 1``.
+
+Resource model (paper Fig. 4/5 and its worked example):
+  * classic tree:   adders = 2**ceil(log2 eta) - 1,  registers = 2**(c+1)-1,
+                    cycles = ceil(log2 eta)
+  * odd-even tree:  adders = eta - 1, registers = sum of level widths,
+                    cycles = ceil(log2 eta)   (identical depth)
+For eta = 9 the paper reports ours: 8 adders / 20 registers / 4 cycles vs
+classic: 15 / 31 / 4 — ``tree_resources`` reproduces those numbers exactly
+(validated in tests/test_addtree.py).
+
+On TPU the same tree is the schedule we use for awkward-length reductions:
+``pairwise_sum`` below is a lax-based O(log eta)-depth reduction with zero
+padding *elements* (a single odd-carry slot per level, never a pad to a
+power of two), and it is the reference semantics for kernels/addtree.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "TreeResources",
+    "tree_resources",
+    "classic_tree_resources",
+    "level_widths",
+    "pairwise_sum",
+    "classic_padded_sum",
+]
+
+
+@dataclass(frozen=True)
+class TreeResources:
+    """Hardware-resource model of a reduction tree (paper Tab.-II analogue)."""
+
+    eta: int            # number of addends
+    adders: int         # total 2-input adders instantiated
+    registers: int      # pipeline registers (incl. input regs), paper counting
+    cycles: int         # pipeline depth in clock cycles
+    padded_inputs: int  # inputs after padding (== eta for the odd-even tree)
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of tree inputs that are zero padding (0.0 for ours)."""
+        return 1.0 - self.eta / self.padded_inputs
+
+
+def level_widths(eta: int) -> list[int]:
+    """Widths of each tree level for the odd-even tree: eta, ceil(eta/2), … 1.
+
+    Includes the input level (width ``eta``) and the final sum (width 1).
+    """
+    if eta < 1:
+        raise ValueError(f"eta must be >= 1, got {eta}")
+    widths = [eta]
+    while widths[-1] > 1:
+        widths.append((widths[-1] + 1) // 2)
+    return widths
+
+
+def tree_resources(eta: int) -> TreeResources:
+    """Resources of the paper's odd-even tree (§III.B.1, Fig. 5)."""
+    widths = level_widths(eta)
+    # one adder per produced pair at each level
+    adders = sum(w // 2 for w in widths[:-1]) if eta > 1 else 0
+    # the paper counts every level's storage slots as registers, including
+    # the input level (Fig. 5: eta=9 -> 9+5+3+2+1 = 20)
+    registers = sum(widths)
+    cycles = len(widths) - 1
+    return TreeResources(eta=eta, adders=adders, registers=registers,
+                         cycles=cycles, padded_inputs=eta)
+
+
+def classic_tree_resources(eta: int) -> TreeResources:
+    """Resources of the classic zero-padded tree (paper Fig. 4).
+
+    Pads eta up to p = 2**ceil(log2 eta); then adders = p-1,
+    registers = 2p-1 (all levels: p + p/2 + … + 1), cycles = log2 p.
+    Reproduces the paper's worked numbers: eta=9 -> 15 adders, 31 registers,
+    4 cycles; eta=144 and eta=256 -> both 255 adders / 511 registers / 8.
+    """
+    if eta < 1:
+        raise ValueError(f"eta must be >= 1, got {eta}")
+    c = max(1, math.ceil(math.log2(eta))) if eta > 1 else 0
+    p = 2 ** c
+    adders = p - 1
+    registers = 2 * p - 1
+    return TreeResources(eta=eta, adders=adders, registers=registers,
+                         cycles=c, padded_inputs=p)
+
+
+def _pair_reduce_once(x: jax.Array, axis: int) -> jax.Array:
+    """One tree level: add adjacent pairs along ``axis``; odd tail forwarded."""
+    n = x.shape[axis]
+    if n == 1:
+        return x
+    even = n - (n % 2)
+    head = jax.lax.slice_in_dim(x, 0, even, axis=axis)
+    lo = jax.lax.slice_in_dim(head, 0, even, stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(head, 1, even, stride=2, axis=axis)
+    summed = lo + hi
+    if n % 2 == 1:
+        tail = jax.lax.slice_in_dim(x, even, n, axis=axis)
+        summed = jax.lax.concatenate([summed, tail], dimension=axis % x.ndim)
+    return summed
+
+
+@partial(jax.jit, static_argnames=("axis", "keepdims"))
+def pairwise_sum(x: jax.Array, axis: int = -1, keepdims: bool = False) -> jax.Array:
+    """Odd-even pairwise tree sum along ``axis`` (paper Fig. 5 semantics).
+
+    Numerically this is the classic pairwise-summation algorithm
+    (O(log eta) error growth vs O(eta) for sequential accumulation), which is
+    also why the paper's fixed-point pipeline keeps full precision: fewer
+    sequential roundings. Grad-safe: built from slicing + adds only.
+    """
+    axis = axis % x.ndim
+    # Statically unrolled tree: depth ceil(log2 eta) levels.
+    while x.shape[axis] > 1:
+        x = _pair_reduce_once(x, axis)
+    return x if keepdims else jnp.squeeze(x, axis=axis)
+
+
+@partial(jax.jit, static_argnames=("axis", "keepdims"))
+def classic_padded_sum(x: jax.Array, axis: int = -1, keepdims: bool = False) -> jax.Array:
+    """Classic tree baseline: zero-pad ``axis`` to the next power of two, then
+    halve exactly. Same value as ``pairwise_sum``; exists so benchmarks can
+    count the padding waste the paper's design removes."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    p = 1 << max(0, (n - 1).bit_length())
+    if p != n:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, p - n)
+        x = jnp.pad(x, pad)
+    while x.shape[axis] > 1:
+        lo = jax.lax.slice_in_dim(x, 0, x.shape[axis], stride=2, axis=axis)
+        hi = jax.lax.slice_in_dim(x, 1, x.shape[axis], stride=2, axis=axis)
+        x = lo + hi
+    return x if keepdims else jnp.squeeze(x, axis=axis)

@@ -1,0 +1,195 @@
+"""Convolution-window pipeline — paper §III.B.2 (C3).
+
+Three artifacts live here:
+
+1. The *laws* of the paper's window buffer — output sizes (Eq. 1–2), the
+   fill latency ``T_u = (K-1)·W + K - 1`` (Fig. 8) and the ``(K-1)/K``
+   adjacent-window data-reuse ratio (Fig. 6) — as plain functions used by
+   tests and benchmarks.
+
+2. ``LineBufferSim`` — a cycle-accurate software model of the paper's
+   WINDOW_BUFFER (K×K) + SHIFT_BUFFER ((K-1)×(W-K)) register structure,
+   following the five parallel per-cycle steps of §III.B.2 verbatim. It
+   exists to *validate the paper's claims exactly* (one window per cycle
+   after T_u; window at cycle K·W is x_(W0); window at cycle H·W is
+   x_(H0·W0)). It is NOT the TPU execution path.
+
+3. ``extract_windows`` / ``conv2d_ref`` / ``conv2d_im2col`` — the JAX
+   formulations. ``conv2d_ref`` computes convolution in the paper's
+   dataflow order (intra-kernel multiply -> odd-even addition tree ->
+   input-channel reduction -> bias, Eq. 3–8). ``conv2d_im2col`` is the
+   MXU-shaped production formulation the Pallas kernel implements
+   (windows become the contracting operand of a matmul).
+
+Layouts follow the paper: input (B, N, H, W), weight (M, N, Hk, Wk),
+output (B, M, Ho, Wo).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.addtree import pairwise_sum
+
+__all__ = [
+    "conv_output_size",
+    "fill_latency",
+    "reuse_ratio",
+    "LineBufferSim",
+    "extract_windows",
+    "conv2d_ref",
+    "conv2d_im2col",
+]
+
+
+def conv_output_size(in_size: int, k: int, stride: int) -> int:
+    """Paper Eq. (1)/(2): floor((H - Hk)/Hs) + 1. VALID padding only —
+    the paper's accelerator does not pad."""
+    if in_size < k:
+        raise ValueError(f"input {in_size} smaller than kernel {k}")
+    return (in_size - k) // stride + 1
+
+
+def fill_latency(k: int, w: int) -> int:
+    """Paper Fig. 8: invalid/fill cycles T_u = (K-1)·W + K - 1."""
+    return (k - 1) * w + k - 1
+
+
+def reuse_ratio(k: int) -> float:
+    """Paper Fig. 6: fraction of data shared between horizontally adjacent
+    windows = (K-1)/K."""
+    return (k - 1) / k
+
+
+class LineBufferSim:
+    """Cycle-accurate model of the paper's window cache (Fig. 7).
+
+    Registers:
+      WB: K rows × K cols.   Stream enters WB[K-1][0] (paper: "row K, col 1");
+          every row shifts right each cycle (col 0 -> col K-1).
+      SB: (K-1) rows × (W-K) cols, also right-shifting. The value exiting
+          WB row r (r >= 1) at col K-1 enters SB[r-1][0] (paper step 3); the
+          value exiting SB row j at col W-K-1 enters WB[j][0] (paper step 5).
+      If W == K the shift buffer is empty and WB row exits feed the row above
+      directly.
+
+    Because WB shifts right, the *newest* pixel of each row sits at col 0 —
+    the window readout therefore reverses columns to recover image order
+    (a wiring choice, zero cost in hardware; the paper's figures elide it).
+
+    The five steps of §III.B.2 happen in parallel: each cycle computes all
+    reads from the *previous* cycle's register values.
+    """
+
+    def __init__(self, k: int, w: int):
+        if k < 1 or w < k:
+            raise ValueError(f"need 1 <= K <= W, got K={k} W={w}")
+        self.k, self.w = k, w
+        self.wb = np.full((k, k), np.nan)
+        self.sb = np.full((max(k - 1, 0), max(w - k, 0)), np.nan)
+        self.cycle = 0  # number of pixels streamed so far
+
+    def step(self, value: float) -> None:
+        """Stream one pixel (row-major image order). One clock cycle."""
+        k, w = self.k, self.w
+        wb_old, sb_old = self.wb.copy(), self.sb.copy()
+        # (2) WINDOW_BUFFER right shift
+        self.wb[:, 1:] = wb_old[:, :-1]
+        # (3)+(4) exits of WB rows 1..K-1 enter SHIFT_BUFFER, which shifts
+        if k > 1:
+            if w > k:
+                self.sb[:, 1:] = sb_old[:, :-1]
+                self.sb[:, 0] = wb_old[1:, k - 1]
+                # (5) SHIFT_BUFFER exits feed WB rows 0..K-2, col 0
+                self.wb[:k - 1, 0] = sb_old[:, w - k - 1]
+            else:  # W == K: no shift buffer, exits feed the row above directly
+                self.wb[:k - 1, 0] = wb_old[1:, k - 1]
+        # (1) new datum enters the bottom row, col 0
+        self.wb[k - 1, 0] = value
+        self.cycle += 1
+
+    @property
+    def window(self) -> np.ndarray:
+        """Current K×K window in image orientation (columns un-reversed)."""
+        return self.wb[:, ::-1].copy()
+
+    def window_valid(self) -> bool:
+        """True when WB holds a complete in-image window (Fig. 8's valid
+        region): past the fill latency and not wrapping a row boundary."""
+        t = self.cycle
+        if t <= fill_latency(self.k, self.w):
+            return False
+        col = (t - 1) % self.w + 1  # 1-indexed column of the newest pixel
+        return col >= self.k
+
+    def run(self, image: np.ndarray):
+        """Stream a full (H, W) image; yield (cycle, row, col, window) for
+        every valid stride-1 window, in paper order x_(1) … x_(H0·W0)."""
+        h, w = image.shape
+        assert w == self.w
+        for i in range(h):
+            for j in range(w):
+                self.step(float(image[i, j]))
+                if self.window_valid():
+                    # newest pixel (i, j) is the window's bottom-right corner
+                    yield self.cycle, i - self.k + 1, j - self.k + 1, self.window
+
+
+def extract_windows(x: jax.Array, k: tuple[int, int],
+                    stride: tuple[int, int]) -> jax.Array:
+    """All convolution windows of ``x`` (B, N, H, W) -> (B, Ho, Wo, N·Kh·Kw).
+
+    This is the dense-tensor statement of what the line buffer produces one
+    entry per cycle: the feature dim is ordered (N, Kh, Kw) to match the
+    paper's Eq. (3) reduction order. Implemented with
+    ``lax.conv_general_dilated_patches`` (a gather, no FLOPs).
+    """
+    kh, kw = k
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=stride, padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    # patches: (B, N*Kh*Kw, Ho, Wo) with feature order (N, Kh, Kw)
+    return jnp.moveaxis(patches, 1, -1)
+
+
+@partial(jax.jit, static_argnames=("stride",))
+def conv2d_ref(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+               stride: tuple[int, int] = (1, 1)) -> jax.Array:
+    """Paper-dataflow convolution oracle (Eq. 3–8).
+
+    x: (B, N, H, W); w: (M, N, Kh, Kw); b: (M,) or None -> (B, M, Ho, Wo).
+
+    Dataflow = the paper's: for every window, K²·N fully-parallel multiplies
+    (C1 intra-kernel + input-channel parallel), then the odd-even addition
+    tree over all N·Kh·Kw products (C2; NO padding to a power of two), then
+    the bias. Output channels are vectorized (C1 output-channel parallel).
+    Accurate but memory-hungry — tests/small shapes only.
+    """
+    m, n, kh, kw = w.shape
+    win = extract_windows(x, (kh, kw), stride)          # (B,Ho,Wo,N·Kh·Kw)
+    prod = win[:, :, :, None, :] * w.reshape(m, n * kh * kw)  # (B,Ho,Wo,M,η)
+    out = pairwise_sum(prod, axis=-1)                   # odd-even tree, η=N·K²
+    if b is not None:
+        out = out + b
+    return jnp.moveaxis(out, -1, 1)                     # (B, M, Ho, Wo)
+
+
+@partial(jax.jit, static_argnames=("stride",))
+def conv2d_im2col(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                  stride: tuple[int, int] = (1, 1)) -> jax.Array:
+    """MXU-shaped formulation: windows as matmul operand.
+
+    Same value as ``conv2d_ref``; this is the layout the Pallas kernel
+    (kernels/conv_window) realizes tile-by-tile in VMEM. The systolic array
+    performs the multiply-add tree of Eq. (9) in hardware.
+    """
+    m, n, kh, kw = w.shape
+    win = extract_windows(x, (kh, kw), stride)          # (B,Ho,Wo,η)
+    out = jnp.einsum("bhwe,me->bmhw", win, w.reshape(m, n * kh * kw),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        out = out + b[None, :, None, None].astype(out.dtype)
+    return out

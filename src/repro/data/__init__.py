@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticTextConfig, SyntheticTextIterator,
+                                 SyntheticMNIST, shard_batch)

@@ -1,0 +1,124 @@
+"""Deterministic, checkpointable synthetic data pipelines.
+
+Offline container ⇒ data is generated, not downloaded, but with the
+properties a production loader must have:
+
+  * deterministic given (seed, step) — a restore mid-run replays the exact
+    stream (fault-tolerance requirement; tested in tests/test_checkpoint);
+  * O(1) state: the iterator checkpoint is {seed, step} only;
+  * shard-aware: ``shard_batch`` places the global batch onto the mesh with
+    the batch-axis NamedSharding (per-host slicing in multi-host setups
+    would plug in here via jax.make_array_from_process_local_data).
+
+SyntheticTextIterator produces a *learnable* stream (a fixed random Markov
+chain over the vocab), so train-loss decrease is a meaningful integration
+test, not noise memorization.
+
+SyntheticMNIST produces MNIST-like 28×28 digit images (procedural strokes
+per class + noise) for the paper's CNN (Tab. I / Fig. 9 reproduction).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["SyntheticTextConfig", "SyntheticTextIterator", "SyntheticMNIST",
+           "shard_batch"]
+
+
+@dataclass(frozen=True)
+class SyntheticTextConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    branching: int = 4      # out-degree of the Markov chain
+
+
+class SyntheticTextIterator:
+    """Markov-chain token stream. State = (seed, step)."""
+
+    def __init__(self, cfg: SyntheticTextConfig, step: int = 0):
+        self.cfg = cfg
+        self.step = step
+        rng = np.random.default_rng(cfg.seed)
+        # fixed transition table: vocab × branching successors
+        self._table = rng.integers(0, cfg.vocab,
+                                   size=(cfg.vocab, cfg.branching),
+                                   dtype=np.int32)
+
+    def state_dict(self) -> dict:
+        return {"seed": self.cfg.seed, "step": self.step}
+
+    @classmethod
+    def from_state(cls, cfg: SyntheticTextConfig, state: dict
+                   ) -> "SyntheticTextIterator":
+        assert state["seed"] == cfg.seed, "seed mismatch on restore"
+        return cls(cfg, step=int(state["step"]))
+
+    def next_batch(self) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, self.step))
+        self.step += 1
+        starts = rng.integers(0, cfg.vocab, size=cfg.global_batch,
+                              dtype=np.int32)
+        choices = rng.integers(0, cfg.branching,
+                               size=(cfg.global_batch, cfg.seq_len),
+                               dtype=np.int32)
+        toks = np.empty((cfg.global_batch, cfg.seq_len + 1), np.int32)
+        toks[:, 0] = starts
+        for t in range(cfg.seq_len):
+            toks[:, t + 1] = self._table[toks[:, t], choices[:, t]]
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+
+class SyntheticMNIST:
+    """Procedural MNIST-like digits: each class = a fixed stroke template
+    (drawn from a seeded RNG) + per-sample jitter and noise. Linearly
+    separable enough to train the paper CNN to >95% accuracy in a few
+    hundred steps, hard enough that an untrained net is at chance."""
+
+    def __init__(self, seed: int = 0, n_classes: int = 10, size: int = 28):
+        self.n_classes, self.size = n_classes, size
+        rng = np.random.default_rng(seed)
+        self.templates = np.zeros((n_classes, size, size), np.float32)
+        for c in range(n_classes):
+            # random walk stroke per class
+            pts = [(rng.integers(4, size - 4), rng.integers(4, size - 4))]
+            for _ in range(60):
+                dy, dx = rng.integers(-2, 3, size=2)
+                y = int(np.clip(pts[-1][0] + dy, 1, size - 2))
+                x = int(np.clip(pts[-1][1] + dx, 1, size - 2))
+                pts.append((y, x))
+            for y, x in pts:
+                self.templates[c, y - 1:y + 2, x - 1:x + 2] += 0.5
+            self.templates[c] = np.clip(self.templates[c], 0, 1)
+
+    def batch(self, batch_size: int, step: int, seed: int = 1234) -> dict:
+        rng = np.random.default_rng((seed, step))
+        labels = rng.integers(0, self.n_classes, size=batch_size)
+        imgs = self.templates[labels].copy()
+        # jitter: random shift ±2 px
+        for i in range(batch_size):
+            dy, dx = rng.integers(-2, 3, size=2)
+            imgs[i] = np.roll(np.roll(imgs[i], dy, axis=0), dx, axis=1)
+        imgs += rng.normal(0, 0.15, imgs.shape).astype(np.float32)
+        return {"images": jnp.asarray(imgs[:, None, :, :]),
+                "labels": jnp.asarray(labels.astype(np.int32))}
+
+
+def shard_batch(batch: dict, mesh, batch_axes=("pod", "data")) -> dict:
+    """Place a host batch onto the mesh, batch dim sharded over the DP axes
+    present in the mesh."""
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    spec = jax.sharding.PartitionSpec(axes if axes else None)
+
+    def put(x):
+        sh = jax.sharding.NamedSharding(mesh, spec)
+        return jax.device_put(x, sh)
+
+    return jax.tree_util.tree_map(put, batch)

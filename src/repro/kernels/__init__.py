@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+conv_window — window-stationary conv2d (paper C3: the line buffer on VMEM)
+qmatmul     — int8×int8→int32 blocked GEMM (paper C4: fixed-point datapath)
+addtree     — odd-even pairwise reduction (paper C2: the addition tree)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle). Validated in interpret mode on CPU;
+pass interpret=False on real TPUs.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.addtree.ops import tree_reduce_sum  # noqa: F401

@@ -1,0 +1,49 @@
+"""Pallas kernel for the paper's odd-even addition tree (§III.B.1, Fig. 5).
+
+Reduces (R, η) -> (R, 1) for arbitrary η with a statically-unrolled
+⌈log2 η⌉-level pairwise tree — the level widths go η, ⌈η/2⌉, … 1, exactly
+the paper's construction (odd leftover forwarded, never zero-padded to a
+power of two). On the VPU each level is one vectorized add over the row
+block; the depth (and therefore the dependency chain) matches the classic
+tree, the *work* is η−1 adds instead of 2^⌈log2 η⌉−1.
+
+Rows are tiled over the grid; η stays in-block (the tree is a cross-lane
+reduction — for the η values this system meets, η = N·Kh·Kw ≤ a few
+thousand, one block of η lanes fits VMEM trivially).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _addtree_kernel(x_ref, o_ref):
+    x = x_ref[...]                      # (rb, eta)
+    # statically unrolled odd-even tree
+    while x.shape[1] > 1:
+        n = x.shape[1]
+        even = n - (n % 2)
+        lo = jax.lax.slice(x, (0, 0), (x.shape[0], even), (1, 2))
+        hi = jax.lax.slice(x, (0, 1), (x.shape[0], even), (1, 2))
+        s = lo + hi
+        if n % 2:
+            tail = jax.lax.slice(x, (0, even), (x.shape[0], n))
+            s = jnp.concatenate([s, tail], axis=1)
+        x = s
+    o_ref[...] = x.astype(o_ref.dtype)
+
+
+def tree_reduce_sum_pallas(x: jax.Array, *, rb: int,
+                           interpret: bool = True) -> jax.Array:
+    """(R, η) -> (R, 1). rb divides R."""
+    r, eta = x.shape
+    assert r % rb == 0, (r, rb)
+    return pl.pallas_call(
+        _addtree_kernel,
+        grid=(r // rb,),
+        in_specs=[pl.BlockSpec((rb, eta), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,23 @@
+"""jit'd wrapper for the odd-even addition-tree reduction kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.addtree.kernel import tree_reduce_sum_pallas
+
+
+def _pick_rb(r: int, cap: int = 256) -> int:
+    b = min(cap, r)
+    while r % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_reduce_sum(x: jax.Array, interpret: bool = True) -> jax.Array:
+    """(R, η) -> (R,): odd-even pairwise tree sum along the last axis."""
+    r, _ = x.shape
+    out = tree_reduce_sum_pallas(x, rb=_pick_rb(r), interpret=interpret)
+    return out[:, 0]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the odd-even addition-tree reduction kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.addtree import pairwise_sum
+
+
+def tree_reduce_sum_ref(x: jax.Array) -> jax.Array:
+    """(R, eta) -> (R,): odd-even pairwise tree sum along the last axis."""
+    return pairwise_sum(x, axis=-1)

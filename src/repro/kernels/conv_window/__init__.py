@@ -1,0 +1,1 @@
+from repro.kernels.conv_window.ops import conv2d_window  # noqa: F401

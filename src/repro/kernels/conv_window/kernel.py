@@ -1,0 +1,127 @@
+"""Window-stationary Pallas TPU conv2d — the paper's window buffer on VMEM.
+
+Mapping of the paper's §III.B.2 structure onto the TPU memory hierarchy
+(DESIGN.md §2, row C3):
+
+  FPGA                         TPU (this kernel)
+  ----                         -----------------
+  SHIFT_BUFFER (K-1)×(W-K)     the input *slab*: a (rows_in × W) full-width
+    holds W-K trailing pixels    stripe of the image, DMA'd HBM->VMEM once
+    of the previous K-1 rows     per (row-block, batch) grid step
+  WINDOW_BUFFER K×K regs       the Kh·Kw statically-unrolled strided slices
+    one window per clock         of the slab in VREGs, assembled into an
+                                 im2col tile (RB·Wo, N·Kh·Kw) in VMEM
+  K² DSP multipliers +         one MXU contraction of the im2col tile with
+    odd-even addition tree       the (N·Kh·Kw, MB) weight tile — the systolic
+                                 array performs all multiplies and the full
+                                 reduction tree per output element
+  M parallel kernel banks      the Cout grid axis (output-channel parallel)
+  N-channel parallel units     Cin folded into the contraction (all input
+                                 channels reduce inside the MXU)
+
+Reuse invariant preserved: each input element crosses HBM->VMEM once per
+row block (halo rows of adjacent blocks excepted: Kh−stride_h rows, the same
+(K−1)/K-style overlap the paper's SHIFT_BUFFER absorbs — here amortized to
+(Kh−s)/(RB·s) per block, i.e. *better* than one line-buffer row because a
+block carries RB rows). Pipelining of DMA against MXU work is done by the
+Pallas TPU pipeline (double-buffered by default) — the "one window per
+clock" II=1 property becomes "one im2col tile per grid step with the next
+slab's DMA in flight".
+
+Grid: (B, ⌈Ho/RB⌉, ⌈M/MB⌉). Block shapes are chosen by ops.py to fit a VMEM
+budget and keep the contraction dims MXU-aligned where possible (the feature
+dim η = N·Kh·Kw is deliberately NOT padded to a power of two — the odd-even
+tree rule; the MXU only needs multiples of the 8×128 tile, which Mosaic pads
+to internally).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_window_kernel(x_ref, w_ref, b_ref, o_ref, *,
+                        kh: int, kw: int, stride: tuple[int, int],
+                        rb: int, wo: int, n: int, ho: int):
+    """One grid step: slab -> windows -> MXU contraction -> output tile.
+
+    x_ref: (N, rows_in, W)   input slab (batch squeezed), rows_in=(rb-1)*sh+kh
+    w_ref: (N*Kh*Kw, MB)     flat weight tile (feature order N, Kh, Kw)
+    b_ref: (1, MB)           bias tile
+    o_ref: (MB, RB, Wo)      output tile (batch squeezed)
+    """
+    sh, sw = stride
+    slab = x_ref[...]                       # (N, rows_in, W) in VMEM
+
+    # WINDOW_BUFFER walk: Kh*Kw static slices, each strided to (N, RB, Wo).
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            tap = jax.lax.slice(
+                slab,
+                (0, i, j),
+                (n, i + (rb - 1) * sh + 1, j + (wo - 1) * sw + 1),
+                (1, sh, sw),
+            )                               # (N, RB, Wo)
+            taps.append(tap)
+    # windows: feature axis ordered (N, Kh, Kw) to match the flat weights.
+    win = jnp.stack(taps, axis=1)           # (N, Kh*Kw, RB, Wo)
+    win = win.reshape(n * kh * kw, rb * wo)  # (η, RB*Wo)
+
+    # The MXU is the multiply-add tree: one contraction does all η products
+    # and their reduction per output element (paper Eq. 9).
+    acc = jax.lax.dot_general(
+        w_ref[...], win,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                       # (MB, RB*Wo)
+    acc = acc + b_ref[0, :][:, None]
+    # Mask rows past Ho (last row-block ragged edge writes garbage rows that
+    # the out BlockSpec clips; keep values finite for determinism).
+    o_ref[...] = acc.reshape(-1, rb, wo).astype(o_ref.dtype)
+
+
+def conv2d_window_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
+                         kh: int, kw: int, stride: tuple[int, int],
+                         rb: int, mb: int, interpret: bool = True
+                         ) -> jax.Array:
+    """Launch the kernel. x: (B, N, H, W); wf: (η, M) flat weights; b: (M,).
+
+    rb: output rows per block; mb: output channels per block.
+    Returns (B, M, Ho, Wo) in x.dtype.
+    """
+    bsz, n, h, w = x.shape
+    eta, m = wf.shape
+    assert eta == n * kh * kw, (eta, n, kh, kw)
+    sh, sw = stride
+    ho = (h - kh) // sh + 1
+    wo = (w - kw) // sw + 1
+    assert ho % rb == 0 and m % mb == 0, (ho, rb, m, mb)
+    rows_in = (rb - 1) * sh + kh
+
+    grid = (bsz, ho // rb, m // mb)
+
+    kernel = functools.partial(
+        _conv_window_kernel, kh=kh, kw=kw, stride=stride,
+        rb=rb, wo=wo, n=n, ho=ho)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # the slab: full width (line-buffer fidelity), halo rows via
+            # element-indexed offsets — consecutive row blocks overlap by
+            # kh - sh rows exactly like adjacent line-buffer windows.
+            pl.BlockSpec((pl.Squeezed(), n, pl.Element(rows_in), w),
+                         lambda bi, ri, mi: (bi, 0, ri * rb * sh, 0)),
+            pl.BlockSpec((eta, mb), lambda bi, ri, mi: (0, mi)),
+            pl.BlockSpec((1, mb), lambda bi, ri, mi: (0, mi)),
+        ],
+        out_specs=pl.BlockSpec((pl.Squeezed(), mb, rb, wo),
+                               lambda bi, ri, mi: (bi, mi, ri, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, ho, wo), x.dtype),
+        interpret=interpret,
+    )(x, wf, b)

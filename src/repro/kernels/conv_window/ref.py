@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the window-stationary conv kernel.
+
+Delegates to core.window.conv2d_ref — the paper-dataflow formulation
+(windows -> odd-even addition tree), which tests cross-check against
+``jax.lax.conv_general_dilated`` as an independent second oracle.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.window import conv2d_ref
+
+
+def conv2d_window_ref(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                      *, stride: tuple[int, int] = (1, 1)) -> jax.Array:
+    """x: (B, N, H, W), w: (M, N, Kh, Kw), b: (M,)|None -> (B, M, Ho, Wo)."""
+    return conv2d_ref(x, w, b, stride)

@@ -1,0 +1,1 @@
+from repro.kernels.qmatmul.ops import qmatmul  # noqa: F401

@@ -1,0 +1,57 @@
+"""jit'd wrapper: quantize-aware matmul entry points.
+
+``qmatmul`` consumes pre-quantized operands (int8 codes + scales, the
+QTensor layout from core.quantize). ``qdense`` is the convenience path used
+by quantized inference: fp activations in, int8 weights, fp out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor, quantize_int8
+from repro.kernels.qmatmul.kernel import qmatmul_pallas
+
+# int8 MXU-native tiling: sublane×lane = 32×128 for int8 on TPU.
+_BM, _BN, _BK = 128, 128, 128
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest divisor of dim that is <= block (no power-of-two padding)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def qmatmul(x_codes: jax.Array, w_codes: jax.Array,
+            x_scale: jax.Array, w_scale: jax.Array,
+            out_dtype=jnp.float32, interpret: bool = True) -> jax.Array:
+    """(M,K) int8 · (K,N) int8 -> (M,N). Scales: x (M,1)|scalar, w (1,N)|scalar."""
+    m, k = x_codes.shape
+    _, n = w_codes.shape
+    xs = jnp.broadcast_to(jnp.asarray(x_scale, jnp.float32), (m, 1)) \
+        if jnp.ndim(x_scale) < 2 else x_scale.astype(jnp.float32)
+    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (1, n)) \
+        if jnp.ndim(w_scale) < 2 else w_scale.astype(jnp.float32)
+    bm, bn, bk = _pick(_BM, m), _pick(_BN, n), _pick(_BK, k)
+    return qmatmul_pallas(x_codes, w_codes, xs, ws, bm=bm, bn=bn, bk=bk,
+                          out_dtype=out_dtype, interpret=interpret)
+
+
+def qdense(x: jax.Array, wq: QTensor, out_dtype=None,
+           interpret: bool = True) -> jax.Array:
+    """fp (…, K) · int8 (K, N) -> fp (…, N): per-token activation quant,
+    per-output-channel weight scales. The deployment matmul for quantized
+    serving (paper Tab. III '16 bit fixed' row, int8 on TPU)."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    xq = quantize_int8(x2, axis=-1)             # per-row (per-token) scale
+    out = qmatmul(xq.codes, wq.codes, xq.scale, wq.scale,
+                  out_dtype=out_dtype, interpret=interpret)
+    return out.reshape(*lead, -1)

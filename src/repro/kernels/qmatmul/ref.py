@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the int8 quantized GEMM (paper C4 deployment path).
+
+Integer-exact: int8 codes are widened to int32, the contraction accumulates
+in int32 (exactly what the TPU MXU int8 path does), and the per-row/
+per-column scales are applied in fp32 at the end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmatmul_ref(x_codes: jax.Array, w_codes: jax.Array,
+                x_scale: jax.Array, w_scale: jax.Array,
+                out_dtype=jnp.float32) -> jax.Array:
+    """(M,K) int8 · (K,N) int8 -> (M,N) out_dtype.
+
+    x_scale: (M, 1) or scalar fp32; w_scale: (1, N) or scalar fp32.
+    out = (x_codes @ w_codes) * x_scale * w_scale, int32 accumulation.
+    """
+    acc = jnp.dot(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)

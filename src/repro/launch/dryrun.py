@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production meshes, report memory/cost/collective analysis.
+
+The two lines above MUST stay the first statements of this module: jax
+locks the device count at first initialization, and the dry-run needs 512
+placeholder host devices to build the (2, 16, 16) production mesh. Nothing
+else in the repo sets this flag (smoke tests and benches see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --multi-pod both
+Writes one JSON per cell under reports/dryrun/.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import RooflineReport
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.sharding.logical import (A, DEFAULT_RULES, SP_DECODE_RULES,
+                                    ShardingCtx, param_shardings, spec_for)
+from repro.train.steps import make_train_step
+
+REPORTS = Path(__file__).resolve().parents[3] / "reports" / "dryrun"
+TRAIN_MICROBATCHES = 16
+
+
+def _named(mesh, specs, axes, rules):
+    """ShapeDtypeStruct pytree + A-axes pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s, a: jax.sharding.NamedSharding(
+            mesh, spec_for(mesh, s.shape, a.names, rules)), specs, axes)
+
+
+def _opt_axes(param_axes):
+    return {"m": param_axes, "v": param_axes, "step": A()}
+
+
+def model_flops_for(arch_spec, kind: str, seq: int, batch: int) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (inference fwd)."""
+    m = arch_spec.model()
+    n_active = m.cfg.active_param_count() if hasattr(m.cfg, "active_param_count") \
+        else m.cfg.param_count()
+    if kind == "train":
+        tokens = batch * seq
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = batch * seq
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * batch  # decode: one token per sequence
+
+
+def lower_cell(arch_id: str, shape_id: str, mesh, rules=None,
+               config_patch: dict | None = None,
+               microbatches: int | None = None,
+               rule_patch: dict | None = None,
+               cast_params_once: bool = False):
+    """Build + lower one (arch, shape) cell on ``mesh``. Returns lowered.
+
+    Hillclimb knobs: ``config_patch`` (dataclasses.replace on the model
+    config), ``microbatches`` (overrides the dp-aware default),
+    ``rule_patch`` (sharding-rule overrides on top of the cell default).
+    """
+    import dataclasses
+    spec = get_arch(arch_id)
+    reason = spec.skip_reason(shape_id)
+    if reason:
+        raise SkipCell(reason)
+    kind, in_specs, in_axes, seq, batch = spec.input_specs(shape_id)
+    if rules is None:
+        rules = SP_DECODE_RULES if shape_id == "long_500k" else DEFAULT_RULES
+        if spec.rule_overrides:
+            rules = rules.with_overrides(**spec.rule_overrides)
+    if rule_patch:
+        rules = rules.with_overrides(**rule_patch)
+    ctx = ShardingCtx(mesh, rules)
+    model = spec.model()
+    if config_patch:
+        model = type(model)(dataclasses.replace(model.cfg, **config_patch))
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(params_shapes, model.axes(), mesh, rules)
+    b_sh = _named(mesh, in_specs, in_axes, rules)
+
+    if kind == "train":
+        # >100B params on 256 × 16 GiB chips: bf16 Adam moments (production
+        # would use block-scaled 8-bit moments, Dettmers et al.; bf16 is the
+        # conservative stand-in) buys back ~2 GB/device.
+        n_params = model.cfg.param_count()
+        opt_cfg = AdamWConfig(m_dtype=jnp.bfloat16, v_dtype=jnp.bfloat16) \
+            if n_params > 100e9 \
+            else AdamWConfig()
+        opt_shapes = jax.eval_shape(lambda p: adamw_init(p, opt_cfg),
+                                    params_shapes)
+        o_sh = param_shardings(opt_shapes, _opt_axes(model.axes()), mesh,
+                               rules)
+        # grad accumulation: the full-remat residual stash of a 40L model
+        # at per-device batch 16 is ~40 GB; microbatching to per-device
+        # batch 1 fits it in HBM at the cost of re-gathered FSDP weights
+        # (EXPERIMENTS.md §Perf). dp-aware: per-μb batch stays divisible
+        # by the DP extent on either mesh.
+        if microbatches is None:
+            sizes = dict(mesh.shape)
+            dp = sizes.get("data", 1) * sizes.get("pod", 1)
+            microbatches = max(1, min(TRAIN_MICROBATCHES, batch // dp))
+        step = make_train_step(model, opt_cfg, ctx,
+                               microbatches=microbatches,
+                               cast_params_once=cast_params_once)
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        return jitted.lower(params_shapes, opt_shapes, in_specs), kind, seq, batch
+
+    cache_shapes, cache_axes = spec.cache_specs(shape_id)
+    c_sh = _named(mesh, cache_shapes, cache_axes, rules)
+    if kind == "prefill":
+        step = make_prefill_step(model, ctx)
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+        return jitted.lower(params_shapes, in_specs, cache_shapes), kind, seq, batch
+
+    # decode
+    step = make_decode_step(model, ctx)
+    tok_sh, pos_sh = b_sh["tokens"], b_sh["pos"]
+    jitted = jax.jit(step, in_shardings=(p_sh, tok_sh, pos_sh, c_sh),
+                     out_shardings=(tok_sh, c_sh), donate_argnums=(3,))
+    return (jitted.lower(params_shapes, in_specs["tokens"],
+                         in_specs["pos"], cache_shapes), kind, seq, batch)
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch_id: str, shape_id: str, *, multi_pod: bool,
+             out_dir: Path = REPORTS, rules=None, tag: str = "",
+             config_patch: dict | None = None,
+             microbatches: int | None = None,
+             rule_patch: dict | None = None,
+             cast_params_once: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec = {"arch": arch_id, "shape": shape_id, "mesh": mesh_name,
+           "chips": chips, "status": "ok", "tag": tag,
+           "variant": {"config_patch": config_patch,
+                       "microbatches": microbatches,
+                       "rule_patch": bool(rule_patch)}}
+    t0 = time.time()
+    try:
+        lowered, kind, seq, batch = lower_cell(
+            arch_id, shape_id, mesh, rules, config_patch=config_patch,
+            microbatches=microbatches, rule_patch=rule_patch,
+            cast_params_once=cast_params_once)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = _mem_dict(mem)
+        # XLA's own cost_analysis counts while-loop bodies once — recorded
+        # for reference; the roofline uses the loop-aware analyzer.
+        cost = compiled.cost_analysis() or {}
+        rec["xla_cost_analysis"] = {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+        t2 = time.time()
+        stats = analyze_hlo(compiled.as_text())
+        rec["analyze_s"] = round(time.time() - t2, 2)
+        rec["collectives"] = {
+            "bytes_by_op": {k: float(v)
+                            for k, v in stats.collective_bytes_by_op.items()},
+            "count_by_op": {k: float(v)
+                            for k, v in stats.collective_count_by_op.items()}}
+        report = RooflineReport(
+            arch=arch_id, shape=shape_id, mesh=mesh_name, chips=chips,
+            flops_per_device=stats.flops,
+            bytes_per_device=stats.bytes_accessed,
+            collective_bytes_per_device=stats.collective_bytes,
+            model_flops=model_flops_for(get_arch(arch_id), kind, seq, batch),
+            peak_memory_per_device=rec["memory_analysis"].get(
+                "peak_bytes_per_device"))
+        rec["roofline"] = report.to_dict()
+    except SkipCell as e:
+        rec["status"] = "skipped"
+        rec["reason"] = str(e)
+    except Exception as e:  # report, don't crash the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{mesh_name}__{arch_id}__{shape_id}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for name in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, name):
+            out[name] = int(getattr(mem, name))
+    if {"temp_size_in_bytes", "argument_size_in_bytes"} <= out.keys():
+        out["peak_bytes_per_device"] = (
+            out["temp_size_in_bytes"] + out["argument_size_in_bytes"]
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"],
+                    default="off")
+    ap.add_argument("--out", default=str(REPORTS))
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    pods = {"on": [True], "off": [False], "both": [False, True]}[args.multi_pod]
+
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(a, s, multi_pod=mp, out_dir=Path(args.out))
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" compute={r['compute_s']:.3e}s"
+                             f" memory={r['memory_s']:.3e}s"
+                             f" coll={r['collective_s']:.3e}s"
+                             f" mfu={r['mfu']:.3f}")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[{rec['mesh']}] {a} × {s}: {status}{extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

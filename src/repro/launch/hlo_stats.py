@@ -1,0 +1,322 @@
+"""Loop-aware cost statistics from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each computation ONCE — a
+scan-over-layers ``while`` body is under-counted by its trip count, which
+would corrupt every roofline term for depth-scanned models (and silently
+drop the FSDP all-gathers that live inside the loop). This module parses
+``compiled.as_text()`` and walks the call graph with loop multipliers:
+
+  * ``while``: trip count read from the ``backend_config``
+    ``known_trip_count`` (present after XLA's loop canonicalization; we
+    fall back to the largest s32 constant in the loop condition);
+  * ``fusion``/``call``: called computation costed at the call site;
+  * FLOPs: ``dot`` = 2·prod(out)·prod(contracting); ``convolution`` =
+    2·prod(out)·prod(kernel)·Cin/groups; elementwise arithmetic ≈ out
+    elements (matches XLA's convention);
+  * bytes: per top-level op, operands + outputs (HBM-traffic proxy; fusion
+    internals excluded — they live in registers/cache);
+  * collectives: output bytes × loop multiplier, all-reduce weighted 2×.
+
+Validated against analytic per-layer counts in tests/test_hlo_stats.py.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloStats", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INST_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "ragged-all-to-all")
+
+# ops whose output-element count we charge as 1 flop/elem (XLA convention)
+_ELEMENTWISE_FLOPS = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "log",
+    "tanh", "rsqrt", "sqrt", "maximum", "minimum", "negate", "abs",
+    "cosine", "sine", "logistic", "expm1", "log1p", "atan2", "remainder",
+    "exponential-minus-one",
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    # TPU-fusion adjustment: the CPU backend leaves many layout/elementwise
+    # ops at top level that the TPU backend fuses into neighboring
+    # dots/fusions; charging them operand+output bytes would model CPU
+    # pipelines, not the TPU target. Their traffic is already represented
+    # by the producing/consuming fusion or dot.
+    "convert", "broadcast", "reshape", "transpose", "select", "compare",
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "negate", "abs", "exponential", "log", "tanh", "rsqrt", "sqrt",
+    "logistic", "and", "or", "not", "xor", "clamp", "floor", "ceil",
+    "round-nearest-afz", "sign", "is-finite", "slice", "pad", "concatenate",
+    "reverse", "rem", "power", "shift-right-logical", "shift-left",
+    "copy-start", "copy-done",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_elems_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Inst:
+    name: str
+    op: str
+    out_shape_txt: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    insts: list[_Inst] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # value name -> shape text
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0                 # all-reduce ×2 weighted
+    collective_bytes_by_op: dict = field(default_factory=dict)
+    collective_count_by_op: dict = field(default_factory=dict)
+    dot_flops: float = 0.0
+
+    def add(self, other: "HloStats", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.dot_flops += other.dot_flops * mult
+        for k, v in other.collective_bytes_by_op.items():
+            self.collective_bytes_by_op[k] = \
+                self.collective_bytes_by_op.get(k, 0) + v * mult
+        for k, v in other.collective_count_by_op.items():
+            self.collective_count_by_op[k] = \
+                self.collective_count_by_op.get(k, 0) + v * mult
+
+
+def _parse_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _HEADER_RE.match(line)
+        if m:
+            cur = _Comp(m.group(2))
+            comps[cur.name] = cur
+            if m.group(1):
+                entry_name = cur.name
+            # parameter shapes from the header
+            for pm in re.finditer(r"(%?[\w.\-]+):\s*((\w+)\[[\d,]*\])", line):
+                cur.shapes["%" + pm.group(1).lstrip("%")] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        im = _INST_RE.match(line)
+        if not im:
+            # also catch ROOT lines without '=' (rare) and parameter decls
+            pm = re.match(r"^\s*(%[\w.\-]+)\s*=\s*", line)
+            continue
+        name, rhs = im.group(1), im.group(2)
+        rhs_np = rhs
+        opm = _OP_RE.search(rhs_np)
+        if not opm:
+            continue
+        op = opm.group(1)
+        out_shape_txt = rhs_np[: opm.start()]
+        # operand list: first (...) group after op name
+        rest = rhs_np[opm.end() - 1:]
+        om = _OPERANDS_RE.match(rest)
+        operands = []
+        if om:
+            for tok in om.group(1).split(","):
+                tok = tok.strip()
+                if tok.startswith("%"):
+                    operands.append(tok)
+                else:
+                    mm = re.search(r"(%[\w.\-]+)", tok)
+                    if mm:
+                        operands.append(mm.group(1))
+        attrs = rest[om.end():] if om else rest
+        cur.shapes[name] = out_shape_txt.strip()
+        cur.insts.append(_Inst(name, op, out_shape_txt, operands, attrs))
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(inst: _Inst, comps: dict[str, _Comp]) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', inst.attrs)
+    if m:
+        return int(m.group(1))
+    # fallback: largest s32 constant in the condition computation
+    cm = re.search(r"condition=(%[\w.\-]+)", inst.attrs)
+    if cm and cm.group(1) in comps:
+        best = 1
+        for ci in comps[cm.group(1)].insts:
+            if ci.op == "constant":
+                k = re.search(r"constant\((\d+)\)", "constant(" +
+                              ci.attrs + ")")
+                mm = re.search(r"s32\[\]\s*constant\((\d+)\)",
+                               ci.out_shape_txt + " constant" + ci.attrs)
+                if mm:
+                    best = max(best, int(mm.group(1)))
+        return best
+    return 1
+
+
+def _dot_flops(inst: _Inst, comp: _Comp) -> float:
+    out_dims = _shape_elems_dims(inst.out_shape_txt)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    lhs = inst.operands[0] if inst.operands else None
+    lhs_shape = comp.shapes.get(lhs, "")
+    lhs_dims = _shape_elems_dims(lhs_shape)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    contract = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx != "" and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(inst: _Inst, comp: _Comp) -> float:
+    out_dims = _shape_elems_dims(inst.out_shape_txt)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    rhs = inst.operands[1] if len(inst.operands) > 1 else None
+    k_dims = _shape_elems_dims(comp.shapes.get(rhs, ""))
+    k_elems = 1
+    for d in k_dims[:-1]:   # all but output-feature dim (approximation)
+        k_elems *= d
+    gm = re.search(r"feature_group_count=(\d+)", inst.attrs)
+    groups = int(gm.group(1)) if gm else 1
+    return 2.0 * out_elems * k_elems / max(groups, 1)
+
+
+def _cost_computation(comp: _Comp, comps: dict[str, _Comp], memo: dict,
+                      top_level: bool) -> HloStats:
+    key = (comp.name, top_level)
+    if key in memo:
+        return memo[key]
+    st = HloStats()
+    for inst in comp.insts:
+        out_bytes = _shape_bytes(inst.out_shape_txt)
+        opnd_bytes = sum(_shape_bytes(comp.shapes.get(o, ""))
+                         for o in inst.operands)
+        if inst.op == "while":
+            bm = re.search(r"body=(%[\w.\-]+)", inst.attrs)
+            cm = re.search(r"condition=(%[\w.\-]+)", inst.attrs)
+            trip = _trip_count(inst, comps)
+            if bm and bm.group(1) in comps:
+                st.add(_cost_computation(comps[bm.group(1)], comps, memo,
+                                         True), trip)
+            if cm and cm.group(1) in comps:
+                st.add(_cost_computation(comps[cm.group(1)], comps, memo,
+                                         True), trip)
+            continue
+        if inst.op in ("fusion", "call", "async-start"):
+            fm = re.search(r"(?:calls|to_apply|called_computations)="
+                           r"\{?(%[\w.\-]+)", inst.attrs)
+            if fm and fm.group(1) in comps:
+                sub = _cost_computation(comps[fm.group(1)], comps, memo,
+                                        False)
+                # fusion internals: flops count, bytes do NOT (registers)
+                st.flops += sub.flops
+                st.dot_flops += sub.dot_flops
+                st.collective_bytes += sub.collective_bytes
+            if top_level:
+                st.bytes_accessed += out_bytes + opnd_bytes
+            continue
+        if inst.op == "conditional":
+            for br in re.findall(r"(%[\w.\-]+)", inst.attrs):
+                if br in comps and ("branch" in inst.attrs
+                                    or "true_computation" in inst.attrs):
+                    pass  # branches are rare in our modules; bytes only
+            if top_level:
+                st.bytes_accessed += out_bytes + opnd_bytes
+            continue
+
+        base = inst.op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base in _COLL_OPS:
+            if not inst.op.endswith("-done"):
+                w = 2.0 if base == "all-reduce" else 1.0
+                st.collective_bytes += w * out_bytes
+                st.collective_bytes_by_op[base] = \
+                    st.collective_bytes_by_op.get(base, 0) + out_bytes
+                st.collective_count_by_op[base] = \
+                    st.collective_count_by_op.get(base, 0) + 1
+                if top_level:
+                    st.bytes_accessed += out_bytes + opnd_bytes
+            continue
+
+        if inst.op == "dot":
+            f = _dot_flops(inst, comp)
+            st.flops += f
+            st.dot_flops += f
+        elif inst.op == "convolution":
+            f = _conv_flops(inst, comp)
+            st.flops += f
+            st.dot_flops += f
+        elif inst.op in _ELEMENTWISE_FLOPS:
+            e = 1
+            for d in _shape_elems_dims(inst.out_shape_txt):
+                e *= d
+            st.flops += e
+
+        if top_level and inst.op not in _SKIP_BYTES:
+            st.bytes_accessed += out_bytes + opnd_bytes
+    memo[key] = st
+    return st
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = _parse_computations(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HloStats()
+    return _cost_computation(entry, comps, {}, True)

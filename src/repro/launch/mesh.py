@@ -1,0 +1,45 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — required because the dry-run must set
+XLA_FLAGS before the first jax call, and tests must see 1 device.
+
+Single pod: (data=16, model=16) = 256 chips (a v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; only gradient
+all-reduce (and nothing else, by construction of the sharding rules —
+'model' collectives and MoE all-to-all stay inside a pod) crosses the
+'pod' axis, which is the DCN-friendly posture for 1000+ node scale-out:
+adding pods grows only the 'pod' axis and the cross-pod reduce.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_mesh_shape(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return shape, axes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape, axes = make_mesh_shape(multi_pod=multi_pod)
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax")
+    devs = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess-based distributed tests."""
+    n = int(np.prod(shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)

@@ -1,0 +1,70 @@
+"""Production serving launcher: ``--arch <id>`` prefill + batched greedy
+decode with the KV/state cache, sharded over the mesh. ``--reduced`` runs a
+small same-family config on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--mesh", default="auto")
+    ap.add_argument("--reduced", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_arch
+    from repro.launch.train import build_mesh, reduced_config
+    from repro.serve.steps import make_decode_step, make_prefill_step
+    from repro.sharding.logical import DEFAULT_RULES, ShardingCtx
+
+    spec = get_arch(args.arch)
+    model = spec.model()
+    if args.reduced:
+        model = reduced_config(model)
+    mesh = build_mesh(args.mesh)
+    rules = DEFAULT_RULES
+    if spec.rule_overrides:
+        rules = rules.with_overrides(**spec.rule_overrides)
+    ctx = ShardingCtx(mesh, rules)
+
+    params = model.init(jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_step(model, ctx))
+    decode = jax.jit(make_decode_step(model, ctx))
+    max_seq = args.prompt_len + args.decode_steps
+
+    toks = jax.random.randint(jax.random.PRNGKey(1),
+                              (args.batch, args.prompt_len), 0,
+                              model.cfg.vocab)
+    cache = model.init_cache(args.batch, max_seq)
+    t0 = time.perf_counter()
+    tok, cache = prefill(params, {"tokens": toks}, cache)
+    jax.block_until_ready(tok)
+    print(f"prefill {args.prompt_len} tokens × {args.batch}: "
+          f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
+
+    out = [np.asarray(tok)]
+    t1 = time.perf_counter()
+    for i in range(args.decode_steps):
+        tok, cache = decode(params, tok,
+                            jnp.asarray(args.prompt_len + i, jnp.int32),
+                            cache)
+        out.append(np.asarray(tok))
+    dt = time.perf_counter() - t1
+    print(f"decode {args.decode_steps} steps: {dt / args.decode_steps * 1e3:"
+          f".2f} ms/token, {args.batch * args.decode_steps / dt:.1f} tok/s")
+    print("sample continuation (request 0):",
+          [int(t[0]) for t in out[:10]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Production training launcher: ``--arch <id>`` + mesh + fault tolerance.
+
+On a real TPU cluster this binary runs under the usual multi-host runtime
+(jax.distributed.initialize is called when JAX_COORDINATOR is set); in this
+container it runs single-process. ``--reduced`` swaps in a small same-family
+config so the full loop (sharded step, checkpoint, auto-resume, preemption
+handling) is exercisable on CPU.
+
+Fault tolerance: atomic keep-k checkpoints every ``--ckpt-every`` steps
+including optimizer + data-iterator state; on restart the latest checkpoint
+is found and training resumes bit-exactly. Elastic restarts (different
+device count) reshard via the logical-axis rules at restore.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def _maybe_init_distributed() -> None:
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()
+
+
+def build_mesh(spec: str):
+    from repro.launch.mesh import make_production_mesh
+    if spec == "auto":
+        n = len(jax.devices())
+        if n >= 512:
+            return make_production_mesh(multi_pod=True)
+        if n >= 256:
+            return make_production_mesh(multi_pod=False)
+        # small/debug: 1×N
+        devs = np.asarray(jax.devices()).reshape(1, n)
+        return jax.sharding.Mesh(devs, ("data", "model"))
+    shape = tuple(int(x) for x in spec.split("x"))
+    axes = ("pod", "data", "model")[-len(shape):]
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def reduced_config(model):
+    from repro.models.transformer import LMConfig
+    cfg = model.cfg
+    if isinstance(cfg, LMConfig):
+        moe = cfg.moe
+        if moe is not None:
+            moe = dataclasses.replace(moe, d_model=64, d_ff=128, n_experts=4,
+                                      top_k=min(moe.top_k, 2))
+        small = dataclasses.replace(
+            cfg, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+            head_dim=None, d_ff=128, vocab=2048, moe=moe,
+            sliding_window=64 if cfg.sliding_window else None, remat="none")
+        return type(model)(small)
+    raise SystemExit(f"--reduced supports LM archs; got {type(cfg)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="auto")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--reduced", action="store_true",
+                    help="small same-family config (CPU debugging)")
+    args = ap.parse_args()
+
+    _maybe_init_distributed()
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs.registry import get_arch
+    from repro.data.pipeline import (SyntheticTextConfig,
+                                     SyntheticTextIterator, shard_batch)
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.sharding.logical import (A, DEFAULT_RULES, ShardingCtx,
+                                        param_shardings)
+    from repro.train.steps import make_train_step
+
+    spec = get_arch(args.arch)
+    model = spec.model()
+    if args.reduced:
+        model = reduced_config(model)
+    mesh = build_mesh(args.mesh)
+    rules = DEFAULT_RULES
+    if spec.rule_overrides:
+        rules = rules.with_overrides(**spec.rule_overrides)
+    ctx = ShardingCtx(mesh, rules)
+    print(f"arch={args.arch} params={model.cfg.param_count() / 1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    opt_cfg = AdamWConfig(total_steps=args.steps)
+    step_fn = make_train_step(model, opt_cfg, ctx,
+                              microbatches=args.microbatches)
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_sh = param_shardings(p_shapes, model.axes(), mesh, rules)
+    o_shapes = jax.eval_shape(adamw_init, p_shapes)
+    o_sh = param_shardings(o_shapes, {"m": model.axes(), "v": model.axes(),
+                                      "step": A()}, mesh, rules)
+    step_jit = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                       out_shardings=(p_sh, o_sh, None),
+                       donate_argnums=(0, 1))
+
+    dcfg = SyntheticTextConfig(vocab=model.cfg.vocab, seq_len=args.seq,
+                               global_batch=args.global_batch)
+    mgr = CheckpointManager(args.ckpt, keep=3)
+    start = 0
+    if mgr.latest_step() is not None:
+        start, params, opt, extra = mgr.restore(
+            params_template=p_shapes, opt_template=o_shapes,
+            params_shardings=p_sh, opt_shardings=o_sh)
+        data = SyntheticTextIterator.from_state(dcfg, extra["data"])
+        print(f"auto-resumed from step {start}")
+    else:
+        params = jax.jit(model.init, out_shardings=p_sh)(
+            jax.random.PRNGKey(0))
+        opt = jax.jit(adamw_init, out_shardings=o_sh)(params)
+        data = SyntheticTextIterator(dcfg)
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = shard_batch(data.next_batch(), mesh)
+        params, opt, metrics = step_jit(params, opt, batch)
+        if (i + 1) % 10 == 0:
+            print(f"step {i + 1:5d}  loss={float(metrics['loss']):.4f}  "
+                  f"{(time.time() - t0) / (i + 1 - start):.2f}s/step",
+                  flush=True)
+        if (i + 1) % args.ckpt_every == 0 or i + 1 == args.steps:
+            mgr.save(i + 1, params=params, opt_state=opt,
+                     extra={"data": data.state_dict()})
+    print("training complete")
+
+
+if __name__ == "__main__":
+    main()

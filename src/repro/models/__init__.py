@@ -1,0 +1,7 @@
+"""Model zoo: the assigned architectures + the paper's CNN.
+
+All models share one functional idiom: ``init(key) -> params`` pytrees,
+``axes() -> A(...)`` logical-sharding pytrees mirroring the params, and
+pure apply functions threaded with a ShardingCtx. Layers are stacked and
+scanned (MaxText-style) so HLO size and compile time stay flat in depth.
+"""

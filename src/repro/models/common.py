@@ -1,0 +1,170 @@
+"""Shared model components: norms, RoPE, activations, init helpers."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import A
+
+__all__ = ["dense_init", "stacked_init", "rms_norm", "layer_norm",
+           "rope_freqs", "apply_rope", "softcap", "ACTIVATIONS",
+           "cross_entropy_loss", "chunked_cross_entropy",
+           "take_last_logits"]
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], fan_in: int,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (std = 1/sqrt(fan_in))."""
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+            * fan_in ** -0.5)
+
+
+def stacked_init(init_fn: Callable[[jax.Array], dict], key: jax.Array,
+                 n: int) -> dict:
+    """vmap an init over ``n`` layer keys -> params stacked on a leading dim."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm in fp32 (mixed-precision safe). ``plus_one``: gemma-style
+    (1 + w) scaling so zero-init means identity."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    w = scale.astype(jnp.float32)
+    return (x * ((1.0 + w) if plus_one else w)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None = None,
+               *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def rope_freqs(positions: jax.Array, head_dim: int,
+               theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """positions (…,) -> (cos, sin) each (…, head_dim/2), fp32."""
+    half = head_dim // 2
+    inv = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B?, S, D/2) broadcastable. Split-half RoPE."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :] if cos.ndim == x.ndim - 1 else cos
+    s = sin[..., None, :] if sin.ndim == x.ndim - 1 else sin
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def chunked_cross_entropy(x: jax.Array, weight: jax.Array,
+                          labels: jax.Array, *,
+                          transpose_weight: bool = False,
+                          final_softcap: float | None = None,
+                          mask: jax.Array | None = None,
+                          chunk: int = 8_192) -> jax.Array:
+    """Cross entropy without materializing the (B,S,V) logits.
+
+    The (tokens × vocab) logits tensor at 256k-vocab training shapes is tens
+    of GB per device in fp32; this computes an online logsumexp over vocab
+    chunks (one scan step per chunk, remat'd so only the running reductions
+    are saved). Functionally identical to softmax CE on full logits.
+
+    x: (B,S,D) final hidden; weight: (V,D) tied embedding or (D,V) lm_head
+    (transpose_weight=True). labels: (B,S) int.
+    """
+    b, s, d = x.shape
+    if transpose_weight:
+        weight = weight.T                      # -> (V, D)
+    v = weight.shape[0]
+    n_chunks = -(-v // chunk)
+    pad_v = n_chunks * chunk - v
+    if pad_v:
+        weight = jnp.pad(weight, ((0, pad_v), (0, 0)))
+    w_c = weight.reshape(n_chunks, chunk, d)
+
+    xt = x.reshape(b * s, d)
+    lab = labels.reshape(b * s)
+
+    def body(carry, inp):
+        run_max, run_sum, lab_logit = carry
+        wc, ci = inp
+        logits = jnp.einsum("td,cd->tc", xt.astype(jnp.float32),
+                            wc.astype(jnp.float32))
+        if final_softcap is not None:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        if pad_v:
+            col = jnp.arange(chunk) + ci * chunk
+            logits = jnp.where(col[None, :] < v, logits, -jnp.inf)
+        cmax = logits.max(-1)
+        new_max = jnp.maximum(run_max, cmax)
+        run_sum = run_sum * jnp.exp(run_max - new_max) + \
+            jnp.exp(logits - new_max[:, None]).sum(-1)
+        local = lab - ci * chunk
+        in_chunk = (local >= 0) & (local < chunk)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, chunk - 1)[:, None], axis=-1)[:, 0]
+        lab_logit = lab_logit + jnp.where(in_chunk, picked, 0.0)
+        return (new_max, run_sum, lab_logit), None
+
+    init = (jnp.full((b * s,), -jnp.inf, jnp.float32),
+            jnp.zeros((b * s,), jnp.float32),
+            jnp.zeros((b * s,), jnp.float32))
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    (fmax, fsum, flab), _ = jax.lax.scan(
+        body, init, (w_c, jnp.arange(n_chunks)))
+    nll = (fmax + jnp.log(fsum)) - flab
+    if mask is not None:
+        m = mask.reshape(b * s).astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Token-mean cross entropy in fp32. logits (B,S,V), labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()
+
+
+def take_last_logits(logits: jax.Array) -> jax.Array:
+    return logits[:, -1, :]

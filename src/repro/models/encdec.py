@@ -1,0 +1,262 @@
+"""Encoder–decoder transformer (seamless-m4t backbone).
+
+The speech/text modality frontends are STUBS per the task spec:
+``input_specs`` supplies precomputed frame embeddings (B, T_enc, D) to the
+encoder; the real model's conv subsampler (strided 1-D convs — a direct use
+of the paper's window pipeline, see DESIGN.md §5) is represented by
+core.conv in the smoke test, not in the dry-run graph.
+
+Decoder: causal self-attention + cross-attention to encoder output. Serving
+caches both the self KV (rolling) and the cross KV (computed once at
+prefill from the encoder output).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (chunked_cross_entropy, cross_entropy_loss,
+                                 dense_init, rms_norm, stacked_init)
+from repro.models.layers import (AttnConfig, MLPConfig, attention, attn_axes,
+                                 attn_init, mlp_apply, mlp_axes, mlp_init)
+from repro.sharding.logical import A, ShardingCtx, shard
+
+__all__ = ["EncDecConfig", "EncDecLM"]
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    act: str = "gelu"
+    gated: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_kv_heads, head_dim=self.hd)
+
+    @property
+    def mlp_cfg(self) -> MLPConfig:
+        return MLPConfig(d_model=self.d_model, d_ff=self.d_ff, act=self.act,
+                         gated=self.gated)
+
+    def param_count(self) -> int:
+        d = self.d_model
+        attn = 4 * d * d
+        mlp = (3 if self.gated else 2) * d * self.d_ff
+        enc = self.n_enc_layers * (attn + mlp + 2 * d)
+        dec = self.n_dec_layers * (2 * attn + mlp + 3 * d)
+        return enc + dec + self.vocab * d + 2 * d
+
+    active_param_count = param_count
+
+
+class EncDecLM:
+    def __init__(self, cfg: EncDecConfig):
+        self.cfg = cfg
+
+    # ---------- params ----------
+    def _enc_layer_init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"attn": attn_init(k1, cfg.attn_cfg),
+                "mlp": mlp_init(k2, cfg.mlp_cfg),
+                "ln1": jnp.ones((cfg.d_model,)),
+                "ln2": jnp.ones((cfg.d_model,))}
+
+    def _dec_layer_init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"self_attn": attn_init(k1, cfg.attn_cfg),
+                "cross_attn": attn_init(k2, cfg.attn_cfg),
+                "mlp": mlp_init(k3, cfg.mlp_cfg),
+                "ln1": jnp.ones((cfg.d_model,)),
+                "ln2": jnp.ones((cfg.d_model,)),
+                "ln3": jnp.ones((cfg.d_model,))}
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        ke, k1, k2 = jax.random.split(key, 3)
+        return {
+            "embedding": dense_init(ke, (cfg.vocab, cfg.d_model), cfg.d_model),
+            "enc_layers": stacked_init(self._enc_layer_init, k1,
+                                       cfg.n_enc_layers),
+            "dec_layers": stacked_init(self._dec_layer_init, k2,
+                                       cfg.n_dec_layers),
+            "enc_norm": jnp.ones((cfg.d_model,)),
+            "final_norm": jnp.ones((cfg.d_model,)),
+        }
+
+    def axes(self) -> dict:
+        cfg = self.cfg
+        enc_ax = {"attn": attn_axes(cfg.attn_cfg),
+                  "mlp": mlp_axes(cfg.mlp_cfg),
+                  "ln1": A(None), "ln2": A(None)}
+        dec_ax = {"self_attn": attn_axes(cfg.attn_cfg),
+                  "cross_attn": attn_axes(cfg.attn_cfg),
+                  "mlp": mlp_axes(cfg.mlp_cfg),
+                  "ln1": A(None), "ln2": A(None), "ln3": A(None)}
+        stack = lambda ax: jax.tree_util.tree_map(
+            lambda a: A("layers", *a.names), ax,
+            is_leaf=lambda v: isinstance(v, A))
+        return {"embedding": A("vocab", "embed"),
+                "enc_layers": stack(enc_ax), "dec_layers": stack(dec_ax),
+                "enc_norm": A(None), "final_norm": A(None)}
+
+    # ---------- encoder ----------
+    def encode(self, params: dict, frames: jax.Array,
+               ctx: ShardingCtx | None) -> jax.Array:
+        """frames: (B, T_enc, D) stub embeddings -> encoder output."""
+        cfg = self.cfg
+        x = shard(frames.astype(cfg.dtype), ctx, "batch", "act_seq",
+                  "act_embed")
+        t = x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(t), x.shape[:2])
+
+        def body(xcur, p):
+            h = rms_norm(xcur, p["ln1"])
+            a, _ = attention(p["attn"], h, cfg.attn_cfg, ctx, q_pos=pos,
+                             causal=False)
+            xcur = xcur + a
+            h = rms_norm(xcur, p["ln2"])
+            return xcur + mlp_apply(p["mlp"], h, cfg.mlp_cfg, ctx), None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"])
+
+    # ---------- decoder ----------
+    def _decode_layers(self, params: dict, x: jax.Array, enc_out: jax.Array,
+                       ctx: ShardingCtx | None, *, q_pos,
+                       self_cache: dict | None, cross_kv: dict | None,
+                       cache_index):
+        cfg = self.cfg
+
+        def body(xcur, xs):
+            p, sc, ckv = xs
+            h = rms_norm(xcur, p["ln1"])
+            cache_kv = None if sc is None else (sc["k"], sc["v"])
+            a, new_kv = attention(p["self_attn"], h, cfg.attn_cfg, ctx,
+                                  q_pos=q_pos, causal=True,
+                                  cache_kv=cache_kv, cache_index=cache_index)
+            xcur = xcur + a
+            h = rms_norm(xcur, p["ln2"])
+            if ckv is not None:
+                c, _ = attention(p["cross_attn"], h, cfg.attn_cfg, ctx,
+                                 q_pos=q_pos, causal=False,
+                                 precomputed_kv=(ckv["k"], ckv["v"]))
+            else:
+                c, _ = attention(p["cross_attn"], h, cfg.attn_cfg, ctx,
+                                 q_pos=q_pos, causal=False, kv_x=enc_out)
+            xcur = xcur + c
+            h = rms_norm(xcur, p["ln3"])
+            xcur = xcur + mlp_apply(p["mlp"], h, cfg.mlp_cfg, ctx)
+            ys = None if new_kv is None else {"k": new_kv[0], "v": new_kv[1]}
+            return xcur, ys
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        return jax.lax.scan(body, x, (params["dec_layers"], self_cache,
+                                      cross_kv))
+
+    def _cross_kv(self, params: dict, enc_out: jax.Array) -> dict:
+        """Per-layer cross K/V from the encoder output (prefill-time)."""
+        def one(p):
+            k = jnp.einsum("btd,dhk->bthk", enc_out,
+                           p["cross_attn"]["wk"].astype(enc_out.dtype))
+            v = jnp.einsum("btd,dhk->bthk", enc_out,
+                           p["cross_attn"]["wv"].astype(enc_out.dtype))
+            return {"k": k, "v": v}
+
+        return jax.vmap(one)(params["dec_layers"])
+
+    def _logits(self, params: dict, x: jax.Array,
+                ctx: ShardingCtx | None) -> jax.Array:
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embedding"].astype(x.dtype))
+        return shard(logits.astype(jnp.float32), ctx,
+                     "batch", "act_seq", "act_vocab")
+
+    # ---------- public ----------
+    def loss(self, params: dict, batch: dict,
+             ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        """batch: frames (B,T_enc,D), tokens (B,T_dec), labels (B,T_dec)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], ctx)
+        x = params["embedding"][batch["tokens"]].astype(cfg.dtype)
+        x = shard(x, ctx, "batch", "act_seq", "act_embed")
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, _ = self._decode_layers(params, x, enc_out, ctx, q_pos=pos,
+                                   self_cache=None, cross_kv=None,
+                                   cache_index=None)
+        x = rms_norm(x, params["final_norm"])
+        ce = chunked_cross_entropy(x, params["embedding"], batch["labels"],
+                                   mask=batch.get("loss_mask"))
+        return ce, {"ce": ce}
+
+    def init_cache(self, batch: int, max_seq: int,
+                   enc_seq: int | None = None) -> dict:
+        """max_seq: decoder self-cache length; enc_seq: cross KV length."""
+        cfg = self.cfg
+        enc_seq = enc_seq or max_seq
+        l, kv, hd = cfg.n_dec_layers, cfg.n_kv_heads, cfg.hd
+        return {
+            "self": {"k": jnp.zeros((l, batch, max_seq, kv, hd), cfg.dtype),
+                     "v": jnp.zeros((l, batch, max_seq, kv, hd), cfg.dtype)},
+            "cross": {"k": jnp.zeros((l, batch, enc_seq, kv, hd), cfg.dtype),
+                      "v": jnp.zeros((l, batch, enc_seq, kv, hd), cfg.dtype)},
+        }
+
+    def cache_axes(self) -> dict:
+        kvax = {"k": A("layers", "batch", "kv_seq", "kv_heads", None),
+                "v": A("layers", "batch", "kv_seq", "kv_heads", None)}
+        return {"self": dict(kvax), "cross": dict(kvax)}
+
+    def prefill(self, params: dict, batch: dict, cache: dict,
+                ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], ctx)
+        cross = self._cross_kv(params, enc_out)
+        cross = jax.tree_util.tree_map(
+            lambda a, ref: a.astype(ref.dtype), cross, cache["cross"])
+        x = params["embedding"][batch["tokens"]].astype(cfg.dtype)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        x, new_self = self._decode_layers(
+            params, x, enc_out, ctx, q_pos=pos, self_cache=cache["self"],
+            cross_kv=cross, cache_index=jnp.zeros((), jnp.int32))
+        logits = self._logits(params, x[:, -1:, :], ctx)
+        return logits[:, 0, :], {"self": new_self, "cross": cross}
+
+    def decode_step(self, params: dict, tokens: jax.Array, pos: jax.Array,
+                    cache: dict, ctx: ShardingCtx | None = None
+                    ) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = params["embedding"][tokens[:, None]].astype(cfg.dtype)
+        q_pos = jnp.broadcast_to(pos[None, None], x.shape[:2])
+        x, new_self = self._decode_layers(
+            params, x, None, ctx, q_pos=q_pos, self_cache=cache["self"],
+            cross_kv=cache["cross"], cache_index=pos)
+        logits = self._logits(params, x, ctx)
+        return logits[:, 0, :], {"self": new_self, "cross": cache["cross"]}

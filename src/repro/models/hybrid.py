@@ -1,0 +1,310 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block
+[arXiv:2411.15242].
+
+Structure: ``n_layers`` Mamba2 blocks; after every ``shared_interval``
+blocks, one shared transformer block (attention + MLP, the SAME parameters
+at every invocation) runs on concat(hidden, embedding_residual) projected
+back to d_model — Zamba's parameter-sharing trick. We scan over groups of
+``shared_interval`` Mamba layers (inner scan) + one shared-block call, with
+a tail scan for the remainder, so HLO stays depth-independent.
+
+Simplification vs the released zamba2-7b: ONE shared block (the release
+alternates two) — noted in DESIGN.md §5. Everything else (Mamba2 SSD core,
+conv1d window state, shared-block concat-projection, rope attention) is
+structural.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (chunked_cross_entropy, cross_entropy_loss,
+                                 dense_init, rms_norm, stacked_init)
+from repro.models.layers import (AttnConfig, MLPConfig, attention, attn_axes,
+                                 attn_init, mlp_apply, mlp_axes, mlp_init)
+from repro.models.mamba2 import (Mamba2Config, mamba2_apply, mamba2_axes,
+                                 mamba2_decode_step, mamba2_init,
+                                 mamba2_state_shape)
+from repro.sharding.logical import A, ShardingCtx, shard
+
+__all__ = ["HybridConfig", "HybridLM"]
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int                  # total mamba2 layers
+    d_model: int
+    n_heads: int                   # shared attention block
+    n_kv_heads: int
+    d_ff: int                      # shared block MLP
+    vocab: int
+    d_state: int = 64
+    shared_interval: int = 6
+    mamba_chunk: int = 128
+    ssd_bf16: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.shared_interval
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers % self.shared_interval
+
+    @property
+    def mamba_cfg(self) -> Mamba2Config:
+        return Mamba2Config(d_model=self.d_model, d_state=self.d_state,
+                            chunk=self.mamba_chunk, ssd_bf16=self.ssd_bf16)
+
+    @property
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv_heads=self.n_kv_heads,
+                          head_dim=self.d_model // self.n_heads)
+
+    @property
+    def mlp_cfg(self) -> MLPConfig:
+        return MLPConfig(d_model=self.d_model, d_ff=self.d_ff, act="gelu")
+
+    def param_count(self) -> int:
+        m = self.mamba_cfg
+        per_mamba = (self.d_model * (2 * m.d_inner + 2 * m.d_state
+                                     + m.n_heads)
+                     + m.d_conv * m.conv_dim + m.d_inner * self.d_model
+                     + 3 * m.n_heads + m.d_inner)
+        shared = (2 * self.d_model * self.d_model  # concat proj
+                  + 4 * self.d_model * self.d_model  # attn (MHA)
+                  + 3 * self.d_model * self.d_ff + 4 * self.d_model)
+        return (self.n_layers * per_mamba + shared
+                + self.vocab * self.d_model + self.d_model)
+
+    active_param_count = param_count
+
+
+class HybridLM:
+    def __init__(self, cfg: HybridConfig):
+        self.cfg = cfg
+
+    # ---------- params ----------
+    def _mamba_layer_init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"mamba": mamba2_init(k1, cfg.mamba_cfg),
+                "ln": jnp.ones((cfg.d_model,))}
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        ke, km, ka, kp, kf = jax.random.split(key, 5)
+        ka1, ka2 = jax.random.split(ka)
+        params = {
+            "embedding": dense_init(ke, (cfg.vocab, cfg.d_model), cfg.d_model),
+            "mamba_layers": stacked_init(self._mamba_layer_init, km,
+                                         cfg.n_layers),
+            "shared": {
+                "concat_proj": dense_init(kp, (2 * cfg.d_model, cfg.d_model),
+                                          2 * cfg.d_model),
+                "attn": attn_init(ka1, cfg.attn_cfg),
+                "mlp": mlp_init(ka2, cfg.mlp_cfg),
+                "ln1": jnp.ones((cfg.d_model,)),
+                "ln2": jnp.ones((cfg.d_model,)),
+            },
+            "final_norm": jnp.ones((cfg.d_model,)),
+        }
+        return params
+
+    def axes(self) -> dict:
+        cfg = self.cfg
+        mamba_ax = {"mamba": mamba2_axes(cfg.mamba_cfg), "ln": A(None)}
+        mamba_ax = jax.tree_util.tree_map(
+            lambda a: A("layers", *a.names), mamba_ax,
+            is_leaf=lambda v: isinstance(v, A))
+        return {
+            "embedding": A("vocab", "embed"),
+            "mamba_layers": mamba_ax,
+            "shared": {
+                "concat_proj": A("embed", None),
+                "attn": attn_axes(cfg.attn_cfg),
+                "mlp": mlp_axes(cfg.mlp_cfg),
+                "ln1": A(None), "ln2": A(None),
+            },
+            "final_norm": A(None),
+        }
+
+    # ---------- blocks ----------
+    def _shared_block(self, p: dict, x: jax.Array, x0: jax.Array,
+                      ctx: ShardingCtx | None, *, q_pos, cache_kv,
+                      cache_index):
+        """Shared attention+MLP on concat(hidden, embedding residual)."""
+        cfg = self.cfg
+        h = jnp.concatenate([x, x0], axis=-1)
+        h = jnp.einsum("bse,ed->bsd", h, p["concat_proj"].astype(x.dtype))
+        hn = rms_norm(h, p["ln1"])
+        attn_out, new_kv = attention(p["attn"], hn, cfg.attn_cfg, ctx,
+                                     q_pos=q_pos, causal=True,
+                                     cache_kv=cache_kv,
+                                     cache_index=cache_index)
+        h = h + attn_out
+        h = h + mlp_apply(p["mlp"], rms_norm(h, p["ln2"]), cfg.mlp_cfg, ctx)
+        return x + h, new_kv
+
+    def _mamba_scan(self, layers: dict, x: jax.Array,
+                    ctx: ShardingCtx | None, states: dict | None,
+                    prefill_states: bool = False):
+        cfg = self.cfg
+
+        def body(xcur, xs):
+            p, st = xs
+            h = rms_norm(xcur, p["ln"])
+            if st is None and prefill_states:
+                out, new_st = mamba2_apply(p["mamba"], h, cfg.mamba_cfg, ctx,
+                                           return_state=True)
+            elif st is None:
+                out = mamba2_apply(p["mamba"], h, cfg.mamba_cfg, ctx)
+                new_st = None
+            else:
+                h1, new_st = mamba2_decode_step(
+                    p["mamba"], h[:, 0, :], st, cfg.mamba_cfg, ctx)
+                out = h1[:, None, :]
+            return xcur + out, new_st
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        return jax.lax.scan(body, x, (layers, states))
+
+    def _run(self, params: dict, x: jax.Array, ctx: ShardingCtx | None, *,
+             q_pos, mamba_states: dict | None, attn_cache: dict | None,
+             cache_index, prefill_states: bool = False):
+        """Scan groups: [interval × mamba] + shared block, then the tail."""
+        cfg = self.cfg
+        g, n_grouped = cfg.n_groups, cfg.n_groups * cfg.shared_interval
+        x0 = x
+
+        grouped = jax.tree_util.tree_map(
+            lambda a: a[:n_grouped].reshape(g, cfg.shared_interval,
+                                            *a.shape[1:]),
+            params["mamba_layers"])
+        tail = jax.tree_util.tree_map(lambda a: a[n_grouped:],
+                                      params["mamba_layers"])
+        g_states = t_states = None
+        if mamba_states is not None:
+            g_states = jax.tree_util.tree_map(
+                lambda a: a[:n_grouped].reshape(g, cfg.shared_interval,
+                                                *a.shape[1:]), mamba_states)
+            t_states = jax.tree_util.tree_map(lambda a: a[n_grouped:],
+                                              mamba_states)
+
+        def group_body(xcur, xs):
+            glayers, gstates, kv = xs
+            xcur, new_states = self._mamba_scan(glayers, xcur, ctx, gstates,
+                                                prefill_states)
+            cache_kv = None if kv is None else (kv["k"], kv["v"])
+            xcur, new_kv = self._shared_block(
+                params["shared"], xcur, x0, ctx, q_pos=q_pos,
+                cache_kv=cache_kv, cache_index=cache_index)
+            ys_kv = None if new_kv is None else {"k": new_kv[0],
+                                                 "v": new_kv[1]}
+            return xcur, (new_states, ys_kv)
+
+        if cfg.remat != "none":
+            group_body = jax.checkpoint(
+                group_body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+
+        x, (new_g_states, new_attn_cache) = jax.lax.scan(
+            group_body, x, (grouped, g_states, attn_cache))
+        x, new_t_states = self._mamba_scan(tail, x, ctx, t_states,
+                                           prefill_states)
+
+        new_mamba_states = None
+        if mamba_states is not None or prefill_states:
+            new_mamba_states = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate(
+                    [a.reshape(n_grouped, *a.shape[2:]), b], axis=0),
+                new_g_states, new_t_states)
+        return x, new_mamba_states, new_attn_cache
+
+    def _logits(self, params: dict, x: jax.Array,
+                ctx: ShardingCtx | None) -> jax.Array:
+        x = rms_norm(x, params["final_norm"])
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embedding"].astype(x.dtype))
+        return shard(logits.astype(jnp.float32), ctx,
+                     "batch", "act_seq", "act_vocab")
+
+    # ---------- public ----------
+    def loss(self, params: dict, batch: dict,
+             ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embedding"][tokens].astype(cfg.dtype)
+        x = shard(x, ctx, "batch", "act_seq", "act_embed")
+        s = x.shape[1]
+        q_pos = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+        x, _, _ = self._run(params, x, ctx, q_pos=q_pos, mamba_states=None,
+                            attn_cache=None, cache_index=None)
+        x = rms_norm(x, params["final_norm"])
+        ce = chunked_cross_entropy(x, params["embedding"], batch["labels"],
+                                   mask=batch.get("loss_mask"))
+        return ce, {"ce": ce}
+
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        st = mamba2_state_shape(cfg.mamba_cfg, batch)
+        hd = cfg.attn_cfg.head_dim
+        return {
+            "mamba": {k: jnp.zeros((cfg.n_layers, *v), cfg.dtype)
+                      for k, v in st.items()},
+            "attn": {
+                "k": jnp.zeros((cfg.n_groups, batch, max_seq,
+                                cfg.n_kv_heads, hd), cfg.dtype),
+                "v": jnp.zeros((cfg.n_groups, batch, max_seq,
+                                cfg.n_kv_heads, hd), cfg.dtype),
+            },
+        }
+
+    def cache_axes(self) -> dict:
+        return {
+            "mamba": {"ssm": A("layers", "batch", "ssm_heads", None, None),
+                      "conv": A("layers", "batch", None, "ssm_inner")},
+            "attn": {"k": A("layers", "batch", "kv_seq", "kv_heads", None),
+                     "v": A("layers", "batch", "kv_seq", "kv_heads", None)},
+        }
+
+    def prefill(self, params: dict, batch: dict, cache: dict,
+                ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embedding"][tokens].astype(cfg.dtype)
+        s = x.shape[1]
+        q_pos = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+        # prefill fills the attention cache; mamba states are rebuilt by the
+        # chunked scan (final chunk state) — run in parallel mode, then keep
+        # final states via dedicated state-returning path.
+        x, new_states, new_attn = self._run(
+            params, x, ctx, q_pos=q_pos, mamba_states=None,
+            attn_cache=cache["attn"], cache_index=jnp.zeros((), jnp.int32),
+            prefill_states=True)
+        logits = self._logits(params, x[:, -1:, :], ctx)
+        new_states = jax.tree_util.tree_map(
+            lambda a, ref: a.astype(ref.dtype), new_states, cache["mamba"])
+        return logits[:, 0, :], {"mamba": new_states, "attn": new_attn}
+
+    def decode_step(self, params: dict, tokens: jax.Array, pos: jax.Array,
+                    cache: dict, ctx: ShardingCtx | None = None
+                    ) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = params["embedding"][tokens[:, None]].astype(cfg.dtype)
+        q_pos = jnp.broadcast_to(pos[None, None], x.shape[:2])
+        x, new_states, new_attn = self._run(
+            params, x, ctx, q_pos=q_pos, mamba_states=cache["mamba"],
+            attn_cache=cache["attn"], cache_index=pos)
+        logits = self._logits(params, x, ctx)
+        return logits[:, 0, :], {"mamba": new_states, "attn": new_attn}

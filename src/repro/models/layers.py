@@ -1,0 +1,315 @@
+"""Attention + MLP layers (GQA, qk-norm, softcap, sliding window, biases).
+
+Attention supports three entry modes with one code path:
+  * train / prefill: full-sequence queries, causal (or bidirectional for
+    encoders), optionally writing a KV cache;
+  * decode: single-token queries against a cache, with position masking;
+  * cross-attention: ``kv_x`` from the encoder, bidirectional mask.
+
+Sliding-window (gemma2 local layers) is a mask refinement — the KV ring
+buffer is the paper's C3 window pipeline in one dimension and is implemented
+in repro.serve.cache as an optimization on top of this layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (ACTIVATIONS, apply_rope, dense_init,
+                                 rms_norm, rope_freqs, softcap)
+from repro.sharding.logical import A, ShardingCtx, shard
+
+__all__ = ["AttnConfig", "attn_init", "attn_axes", "attention",
+           "MLPConfig", "mlp_init", "mlp_axes", "mlp_apply", "make_attn_mask"]
+
+_NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+
+
+def attn_init(key: jax.Array, cfg: AttnConfig, *, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), d),
+        "wk": dense_init(ks[1], (d, kv, hd), d),
+        "wv": dense_init(ks[2], (d, kv, hd), d),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd))
+        p["bk"] = jnp.zeros((kv, hd))
+        p["bv"] = jnp.zeros((kv, hd))
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,))
+        p["k_norm"] = jnp.ones((hd,))
+    return p
+
+
+def attn_axes(cfg: AttnConfig) -> dict:
+    ax = {
+        "wq": A("embed", "heads", "head"),
+        "wk": A("embed", "kv_heads", "head"),
+        "wv": A("embed", "kv_heads", "head"),
+        "wo": A("heads", "head", "embed"),
+    }
+    if cfg.qkv_bias:
+        ax["bq"] = A("heads", "head")
+        ax["bk"] = A("kv_heads", "head")
+        ax["bv"] = A("kv_heads", "head")
+    if cfg.qk_norm:
+        ax["q_norm"] = A(None)
+        ax["k_norm"] = A(None)
+    return ax
+
+
+def make_attn_mask(q_pos: jax.Array, kv_pos: jax.Array, *,
+                   causal: bool, window: int | None,
+                   kv_len: jax.Array | None = None) -> jax.Array:
+    """Boolean mask (B, Sq, Skv): True = attend.
+
+    q_pos: (B, Sq); kv_pos: (Skv,) or (B, Skv); kv_len: (B,) number of valid
+    cache slots (decode) or None (dense).
+    """
+    if kv_pos.ndim == 1:
+        kv_pos = kv_pos[None, :]
+    qp = q_pos[:, :, None]                       # (B, Sq, 1)
+    kp = kv_pos[:, None, :]                      # (B, 1, Skv)
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= (qp - kp) < window
+    if kv_len is not None:
+        mask &= kp < kv_len[:, None, None]
+    return mask
+
+
+def attention(params: dict, x: jax.Array, cfg: AttnConfig,
+              ctx: ShardingCtx | None, *,
+              q_pos: jax.Array,
+              causal: bool = True,
+              window: int | None = None,
+              window_active: jax.Array | None = None,
+              kv_x: jax.Array | None = None,
+              kv_pos: jax.Array | None = None,
+              cache_kv: tuple[jax.Array, jax.Array] | None = None,
+              cache_index: jax.Array | None = None,
+              precomputed_kv: tuple[jax.Array, jax.Array] | None = None,
+              kv_valid_len: jax.Array | None = None,
+              ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """Returns (out (B,S,D), updated (k_cache, v_cache) or None).
+
+    cache_kv: (B, S_max, KV, hd) ×2. When given with ``cache_index`` (B?,()
+    scalar), the new K/V are written at that offset and attention runs over
+    the whole cache with position masking (decode / chunked prefill).
+
+    ``window``: static sliding-window size; ``window_active``: optional
+    traced bool (per-layer flag under scan — gemma2's local/global
+    alternation) selecting between windowed and full masks.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+    if precomputed_kv is not None:
+        k, v = precomputed_kv
+        k = k.astype(x.dtype)
+        v = v.astype(x.dtype)
+    else:
+        k = jnp.einsum("btd,dhk->bthk", src, params["wk"].astype(x.dtype))
+        v = jnp.einsum("btd,dhk->bthk", src, params["wv"].astype(x.dtype))
+        if cfg.qkv_bias:
+            k = k + params["bk"].astype(x.dtype)
+            v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        if precomputed_kv is None:
+            k = rms_norm(k, params["k_norm"])
+
+    q = shard(q, ctx, "attn_batch", "act_seq", "act_heads", None)
+    k = shard(k, ctx, "attn_batch", "act_seq", "act_kv", None)
+    v = shard(v, ctx, "attn_batch", "act_seq", "act_kv", None)
+
+    if kv_pos is None:
+        kv_pos = (jnp.arange(k.shape[1])[None, :]
+                  if (precomputed_kv is not None or kv_x is not None)
+                  else q_pos)
+    if cfg.use_rope and kv_x is None and precomputed_kv is None:
+        qc, qs_ = rope_freqs(q_pos, hd, cfg.rope_theta)
+        kc, ks_ = rope_freqs(kv_pos, hd, cfg.rope_theta)
+        q = apply_rope(q, qc, qs_)
+        k = apply_rope(k, kc, ks_)
+
+    new_cache = None
+    kv_len = None
+    if cache_kv is not None:
+        ck, cv = cache_kv
+        if cache_index is not None:
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                     cache_index, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                     cache_index, axis=1)
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        k = shard(k, ctx, "batch", "kv_seq", "act_kv", None)
+        v = shard(v, ctx, "batch", "kv_seq", "act_kv", None)
+        new_cache = (ck, cv)
+        t = ck.shape[1]
+        kv_pos_full = jnp.arange(t)
+        kv_len = jnp.broadcast_to(cache_index + s, (b,)) \
+            if cache_index is not None else None
+        mask = make_attn_mask(q_pos, kv_pos_full, causal=causal,
+                              window=None, kv_len=kv_len)
+        if window is not None:
+            wmask = make_attn_mask(q_pos, kv_pos_full, causal=causal,
+                                   window=window, kv_len=kv_len)
+            active = True if window_active is None else window_active
+            mask = jnp.where(active, wmask, mask)
+    else:
+        mask = make_attn_mask(q_pos, kv_pos, causal=causal, window=None,
+                              kv_len=kv_valid_len)
+        if window is not None:
+            wmask = make_attn_mask(q_pos, kv_pos, causal=causal, window=window,
+                                   kv_len=kv_valid_len)
+            active = True if window_active is None else window_active
+            mask = jnp.where(active, wmask, mask)
+
+    # merged-head layout with KV repeated to full heads: a (kv, groups)
+    # score factorization cannot shard when kv_heads < model size, which
+    # replicates the whole attention per model rank; repeating KV keeps the
+    # head dim shardable (each TP rank holds the duplicate kv head it
+    # needs — the standard TP treatment of GQA).
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        seq_name = "kv_seq" if cache_kv is not None else "act_seq"
+        k = shard(k, ctx, "attn_batch", seq_name, "act_heads", None)
+        v = shard(v, ctx, "attn_batch", seq_name, "act_heads", None)
+    if s > _Q_BLOCK:
+        out = _blockwise_attn(q, k, v, mask, cfg.attn_softcap)
+    else:
+        scores = jnp.einsum("bshd,bthd->bhst", q, k) \
+            / jnp.sqrt(hd).astype(x.dtype)
+        scores = softcap(scores, cfg.attn_softcap)
+        scores = jnp.where(mask[:, None, :, :],
+                           scores.astype(jnp.float32), _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", probs, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    out = shard(out, ctx, "batch", "act_seq", "act_embed")
+    return out, new_cache
+
+
+_Q_BLOCK = 512
+
+
+def _pick_q_block(s: int, cap: int = _Q_BLOCK) -> int:
+    qb = min(cap, s)
+    while s % qb:
+        qb -= 1
+    return qb
+
+
+def _blockwise_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                    mask: jax.Array, attn_softcap: float | None
+                    ) -> jax.Array:
+    """Query-blockwise attention: never materializes the (S, T) score map.
+
+    A full (B, H, S, T) fp32 score tensor at train shapes is ~40 GB/device
+    when the head count does not divide the model axis (llama4: 40 heads vs
+    model=16) — measured in the dry-run. Scanning query blocks keeps the
+    live set to (B, H, qb, T) per step; the body is remat'd so backward
+    recomputes each block's probs instead of saving them (FlashAttention's
+    memory behavior, expressed at the XLA level — the Pallas fused kernel
+    is the further step for real-TPU wall time).
+
+    q, k, v: (B, S|T, H, hd) — KV already repeated to full heads.
+    """
+    b, s, h, hd = q.shape
+    qb = _pick_q_block(s)
+    nb = s // qb
+    scale = 1.0 / np.sqrt(hd)
+    qs = jnp.moveaxis(q.reshape(b, nb, qb, h, hd), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nb, qb, -1), 1, 0)
+
+    def body(_, inp):
+        qb_, mb_ = inp
+        scores = jnp.einsum("bshd,bthd->bhst", qb_, k) * scale
+        scores = softcap(scores, attn_softcap)
+        scores = jnp.where(mb_[:, None, :, :],
+                           scores.astype(jnp.float32), _NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(qb_.dtype)
+        return None, jnp.einsum("bhst,bthd->bshd", probs, v)
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    _, outs = jax.lax.scan(body, None, (qs, ms))       # (nb,B,qb,H,hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    act: str = "silu"
+    gated: bool = True
+    use_bias: bool = False
+
+
+def mlp_init(key: jax.Array, cfg: MLPConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (cfg.d_model, cfg.d_ff), cfg.d_model),
+         "wo": dense_init(ks[1], (cfg.d_ff, cfg.d_model), cfg.d_ff)}
+    if cfg.gated:
+        p["wg"] = dense_init(ks[2], (cfg.d_model, cfg.d_ff), cfg.d_model)
+    if cfg.use_bias:
+        p["bi"] = jnp.zeros((cfg.d_ff,))
+        p["bo"] = jnp.zeros((cfg.d_model,))
+    return p
+
+
+def mlp_axes(cfg: MLPConfig) -> dict:
+    ax = {"wi": A("embed", "mlp"), "wo": A("mlp", "embed")}
+    if cfg.gated:
+        ax["wg"] = A("embed", "mlp")
+    if cfg.use_bias:
+        ax["bi"] = A("mlp")
+        ax["bo"] = A(None)
+    return ax
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: MLPConfig,
+              ctx: ShardingCtx | None) -> jax.Array:
+    act = ACTIVATIONS[cfg.act]
+    hid = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
+    if cfg.use_bias:
+        hid = hid + params["bi"].astype(x.dtype)
+    if cfg.gated:
+        gate = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        hid = act(gate) * hid
+    else:
+        hid = act(hid)
+    hid = shard(hid, ctx, "batch", "act_seq", "act_mlp")
+    out = jnp.einsum("bsf,fd->bsd", hid, params["wo"].astype(x.dtype))
+    if cfg.use_bias:
+        out = out + params["bo"].astype(x.dtype)
+    return shard(out, ctx, "batch", "act_seq", "act_embed")

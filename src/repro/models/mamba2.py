@@ -1,0 +1,235 @@
+"""Mamba2 (SSD) block — chunked state-space duality scan [arXiv:2405.21060].
+
+The block's causal conv1d is built on core.conv.causal_conv1d — the paper's
+C3 window pipeline in one dimension (decode keeps a (K-1)-deep ring state,
+literally a WINDOW_BUFFER; DESIGN.md §5, zamba2 row).
+
+SSD semantics (ngroups=1, following the paper's minimal reference):
+  h_t = exp(dt_t · A) · h_{t-1} + dt_t · B_t ⊗ x_t        (per head)
+  y_t = C_t · h_t + D · x_t
+computed chunkwise: intra-chunk via a masked attention-like contraction,
+inter-chunk via a scan over per-chunk states — O(T·P·N) not O(T²).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv import causal_conv1d, causal_conv1d_step
+from repro.models.common import dense_init, rms_norm
+from repro.sharding.logical import A, ShardingCtx, shard
+
+__all__ = ["Mamba2Config", "mamba2_init", "mamba2_axes", "mamba2_apply",
+           "mamba2_decode_step", "mamba2_state_shape"]
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128
+    # contraction dtype for the SSD einsums. Decay accumulation (cumsum,
+    # segsum, exp) always runs fp32; bf16 contractions halve the dominant
+    # byte traffic of the chunked scan (§Perf zamba2 iteration).
+    ssd_bf16: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba2_init(key: jax.Array, cfg: Mamba2Config) -> dict:
+    ks = jax.random.split(key, 4)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + h), d),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, cfg.conv_dim),
+                             cfg.d_conv),
+        "conv_b": jnp.zeros((cfg.conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "D": jnp.ones((h,)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,)) * 3.0 - 5.0))),
+        "norm": jnp.ones((di,)),
+        "out_proj": dense_init(ks[3], (di, d), di),
+    }
+
+
+def mamba2_axes(cfg: Mamba2Config) -> dict:
+    return {
+        "in_proj": A("embed", "ssm_inner"),
+        "conv_w": A(None, "ssm_inner"),
+        "conv_b": A("ssm_inner"),
+        "A_log": A("ssm_heads"),
+        "D": A("ssm_heads"),
+        "dt_bias": A("ssm_heads"),
+        "norm": A("ssm_inner"),
+        "out_proj": A("ssm_inner", "embed"),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(…, q) -> (…, q, q) lower-triangular segment sums:
+    out[..., i, j] = Σ_{k=j+1..i} x[..., k] for i >= j, -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a, b, c, cfg: Mamba2Config):
+    """Chunked SSD. x: (B,T,H,P); dt: (B,T,H); a: (H,) (negative);
+    b, c: (B,T,N). Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    q = cfg.chunk
+    assert t % q == 0, (t, q)
+    nc = t // q
+
+    # discretize: decay log per step = dt * a  (a < 0); input scaled by dt
+    da = dt * a[None, None, :]                          # (B,T,H)
+    xs = x * dt[..., None]                              # (B,T,H,P)
+
+    r = lambda z, shp: z.reshape(shp)
+    da_c = r(da, (bsz, nc, q, h))
+    xs_c = r(xs, (bsz, nc, q, h, p))
+    b_c = r(b, (bsz, nc, q, n))
+    c_c = r(c, (bsz, nc, q, n))
+
+    cdt = jnp.bfloat16 if cfg.ssd_bf16 else jnp.float32
+
+    # 1. intra-chunk (diagonal blocks): attention-like with decay kernel
+    l = jnp.exp(_segsum(jnp.moveaxis(da_c, -1, 2)))     # (B,nc,H,q,q)
+    y_diag = jnp.einsum("bzin,bzjn,bzhij,bzjhp->bzihp",
+                        c_c.astype(cdt), b_c.astype(cdt), l.astype(cdt),
+                        xs_c.astype(cdt)).astype(jnp.float32)
+
+    # 2. per-chunk final states
+    da_cum = jnp.cumsum(da_c, axis=2)                   # (B,nc,q,H)
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)   # (B,nc,q,H)
+    states = jnp.einsum("bzjn,bzjh,bzjhp->bzhpn",
+                        b_c.astype(cdt), decay_states.astype(cdt),
+                        xs_c.astype(cdt)).astype(jnp.float32)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])          # (B,nc,H)
+
+    def scanf(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                               # emit state BEFORE chunk
+
+    init = jnp.zeros((bsz, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scanf, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    # 4. chunk-input contribution
+    state_decay = jnp.exp(da_cum)                       # (B,nc,q,H)
+    y_off = jnp.einsum("bzin,bzih,bzhpn->bzihp",
+                       c_c.astype(cdt), state_decay.astype(cdt),
+                       prev_states.astype(cdt)).astype(jnp.float32)
+
+    y = (y_diag + y_off).reshape(bsz, t, h, p)
+    return y, final
+
+
+def mamba2_apply(params: dict, x: jax.Array, cfg: Mamba2Config,
+                 ctx: ShardingCtx | None, *, return_state: bool = False):
+    """x: (B,T,D) -> (B,T,D) [, final state]. Train/prefill (chunked scan).
+
+    return_state: also return {"ssm","conv"} so serving can continue with
+    mamba2_decode_step after a prefill (states start from zero)."""
+    bsz, t, d = x.shape
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+
+    zxbcdt = jnp.einsum("btd,de->bte", x, params["in_proj"].astype(x.dtype))
+    z, xb, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    xbc_pre = jnp.concatenate([xb, b, c], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc_pre,
+                                    params["conv_w"].astype(x.dtype),
+                                    params["conv_b"].astype(x.dtype)))
+    xb, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    xb = shard(xb, ctx, "batch", "act_seq", "ssm_inner")
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xb.reshape(bsz, t, h, cfg.head_dim)
+    y, final = _ssd_chunked(xh.astype(jnp.float32), dt, a,
+                            b.astype(jnp.float32), c.astype(jnp.float32), cfg)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(bsz, t, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bte,ed->btd", y, params["out_proj"].astype(x.dtype))
+    out = shard(out, ctx, "batch", "act_seq", "act_embed")
+    if return_state:
+        km1 = cfg.d_conv - 1
+        conv_tail = xbc_pre[:, -km1:, :] if t >= km1 else jnp.pad(
+            xbc_pre, ((0, 0), (km1 - t, 0), (0, 0)))
+        state = {"ssm": final.astype(x.dtype), "conv": conv_tail}
+        return out, state
+    return out
+
+
+def mamba2_state_shape(cfg: Mamba2Config, batch: int) -> dict:
+    return {
+        "ssm": (batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+        "conv": (batch, cfg.d_conv - 1, cfg.conv_dim),
+    }
+
+
+def mamba2_decode_step(params: dict, x_t: jax.Array, state: dict,
+                       cfg: Mamba2Config, ctx: ShardingCtx | None
+                       ) -> tuple[jax.Array, dict]:
+    """Single-token recurrent step. x_t: (B,D); state: {"ssm","conv"}."""
+    bsz, d = x_t.shape
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+
+    zxbcdt = jnp.einsum("bd,de->be", x_t, params["in_proj"].astype(x_t.dtype))
+    z, xb, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    xbc = jnp.concatenate([xb, b, c], axis=-1)
+    xbc, conv_state = causal_conv1d_step(
+        xbc, state["conv"], params["conv_w"].astype(x_t.dtype),
+        params["conv_b"].astype(x_t.dtype))
+    xbc = jax.nn.silu(xbc)
+    xb, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,)
+    decay = jnp.exp(dt * a[None, :])                               # (B,H)
+
+    xh = xb.reshape(bsz, h, cfg.head_dim).astype(jnp.float32)
+    ssm = state["ssm"].astype(jnp.float32)
+    ssm = ssm * decay[:, :, None, None] \
+        + jnp.einsum("bh,bn,bhp->bhpn", dt, b.astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", c.astype(jnp.float32), ssm)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, di).astype(x_t.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(x_t.dtype))
+    return out, {"ssm": ssm.astype(state["ssm"].dtype), "conv": conv_state}

@@ -1,0 +1,262 @@
+"""RWKV-6 "Finch" — data-dependent-decay linear attention [arXiv:2404.05892].
+
+Defining feature kept faithfully: the per-channel decay w_t is a function
+of the input (via a small LoRA), so the recurrence
+  S_t = diag(w_t) · S_{t-1} + k_tᵀ · v_t
+  y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+has token-dependent forgetting. Token shift (x_{t-1} ↔ x_t lerp) is a K=2
+causal window — the degenerate form of the paper's line buffer; decode
+carries a single-sample shift state (DESIGN.md §5).
+
+Time mixing runs as a chunked scan: within a chunk of length q the
+contributions are computed with cumprod-decay contractions (GLA-style),
+across chunks a lax.scan carries the (H, dk, dv) state — O(T·q) work with
+O(T/q) sequential steps instead of O(T).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, layer_norm
+from repro.sharding.logical import A, ShardingCtx, shard
+
+__all__ = ["RWKV6Config", "rwkv6_init", "rwkv6_axes", "rwkv6_apply",
+           "rwkv6_decode_step", "rwkv6_state_shape"]
+
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    d_ff: int
+    head_dim: int = 64
+    lora_rank: int = 64
+    chunk: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_model % self.head_dim == 0
+        return self.d_model // self.head_dim
+
+
+def rwkv6_init(key: jax.Array, cfg: RWKV6Config) -> dict:
+    ks = jax.random.split(key, 12)
+    d, f, r = cfg.d_model, cfg.d_ff, cfg.lora_rank
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        # pre-mix LayerNorms (official RWKV block layout)
+        "ln1": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+        "ln2": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+        # time mixing
+        "mix": 0.5 * jnp.ones((5, d)),            # r,k,v,w,g static lerp
+        "w0": jnp.linspace(-6.0, -1.0, d),        # base log-log decay
+        "w_lora_a": dense_init(ks[0], (d, r), d),
+        "w_lora_b": dense_init(ks[1], (r, d), r) * 0.1,
+        "u": jnp.zeros((h, hd)),                  # current-token bonus
+        "wr": dense_init(ks[2], (d, d), d),
+        "wk": dense_init(ks[3], (d, d), d),
+        "wv": dense_init(ks[4], (d, d), d),
+        "wg": dense_init(ks[5], (d, d), d),
+        "wo": dense_init(ks[6], (d, d), d),
+        "ln_x": jnp.ones((d,)),                   # per-head group norm scale
+        # channel mixing
+        "cmix": 0.5 * jnp.ones((2, d)),           # k,r lerp
+        "ck": dense_init(ks[7], (d, f), d),
+        "cv": dense_init(ks[8], (f, d), f),
+        "cr": dense_init(ks[9], (d, d), d),
+    }
+
+
+def rwkv6_axes(cfg: RWKV6Config) -> dict:
+    return {
+        "ln1": A(None), "ln1_b": A(None), "ln2": A(None), "ln2_b": A(None),
+        "mix": A(None, None), "w0": A(None),
+        "w_lora_a": A("embed", None), "w_lora_b": A(None, "embed"),
+        "u": A("ssm_heads", None),
+        "wr": A("embed", "ssm_inner"), "wk": A("embed", "ssm_inner"),
+        "wv": A("embed", "ssm_inner"), "wg": A("embed", "ssm_inner"),
+        "wo": A("ssm_inner", "embed"), "ln_x": A(None),
+        "cmix": A(None, None),
+        "ck": A("embed", "mlp"), "cv": A("mlp", "embed"),
+        "cr": A("embed", "ssm_inner"),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} stream: (B,T,D) -> (B,T,D). prev: (B,D) decode shift state."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return prev[:, None, :]
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, n_heads: int,
+                eps: float = 1e-5) -> jax.Array:
+    """Per-head LayerNorm over head_dim (RWKV's ln_x)."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, n_heads, d // n_heads).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(b, t, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """Chunked WKV recurrence.
+
+    r,k,v: (B,T,H,hd); logw: (B,T,H,hd) (log decay, < 0); u: (H,hd);
+    state: (B,H,hd,hd) initial. Returns (y (B,T,H,hd), final state).
+    """
+    b, t, h, n = r.shape
+    q = chunk
+    assert t % q == 0, (t, q)
+    nc = t // q
+    rs = r.reshape(b, nc, q, h, n)
+    ks = k.reshape(b, nc, q, h, n)
+    vs = v.reshape(b, nc, q, h, n)
+    lw = logw.reshape(b, nc, q, h, n).astype(jnp.float32)
+
+    # cumulative decay within chunk: W[i] = exp(Σ_{j<=i} logw_j)
+    cum = jnp.cumsum(lw, axis=2)                        # (B,nc,q,H,N)
+    # decay applied to incoming state at position i: product of w_1..w_i —
+    # note RWKV applies decay to S BEFORE adding kᵀv of the current token,
+    # and the current token contributes via the u-bonus instead.
+    dec_in = jnp.exp(cum - lw)                          # Π_{j<i} w_j  (j<i ⇒ exclusive)
+    # key j's contribution surviving to the chunk end: Π_{j<m<=q-1} w_m
+    dec_out = jnp.exp(cum[:, :, -1:, :, :] - cum)       # (B,nc,q,H,N)
+
+    # intra-chunk token-to-token: key j visible to query i>j with decay
+    # Π_{j<m<i} w_m = exp(cum[i-1] - cum[j]); plus the u-bonus at i=j.
+    ci = cum - lw                                       # cum exclusive (Σ_{m<i})
+    # pair decay exponent (B,nc,i,j,H,N): clamp masked entries BEFORE exp so
+    # neither value nor gradient can overflow (j >= i region is dropped).
+    expo = ci[:, :, :, None, :, :] - cum[:, :, None, :, :, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), -1)[None, None, :, :, None, None]
+    pair = jnp.exp(jnp.where(mask, expo, -1e30)) * mask  # strictly j < i
+
+    att = jnp.einsum("bzihn,bzjhn,bzijhn->bzijh",
+                     rs.astype(jnp.float32), ks.astype(jnp.float32), pair)
+    y_intra = jnp.einsum("bzijh,bzjhm->bzihm", att, vs.astype(jnp.float32))
+    # u-bonus (current token)
+    bonus = jnp.einsum("bzihn,hn,bzihn->bzih",
+                       rs.astype(jnp.float32), u.astype(jnp.float32),
+                       ks.astype(jnp.float32))
+    y_intra = y_intra + bonus[..., None] * vs.astype(jnp.float32)
+
+    # per-chunk state update pieces
+    chunk_k = jnp.einsum("bzjhn,bzjhn,bzjhm->bzhnm",
+                         ks.astype(jnp.float32), dec_out,
+                         vs.astype(jnp.float32))        # (B,nc,H,N,M)
+    chunk_decay = jnp.exp(cum[:, :, -1])                # (B,nc,H,N)
+
+    def scanf(carry, inp):
+        ck_, cd_, = inp
+        new = carry * cd_[..., None] + ck_
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        scanf, state.astype(jnp.float32),
+        (jnp.moveaxis(chunk_k, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                     # (B,nc,H,N,M)
+
+    y_state = jnp.einsum("bzihn,bzihn,bzhnm->bzihm",
+                         rs.astype(jnp.float32), dec_in, prev)
+    y = (y_intra + y_state).reshape(b, t, h, n)
+    return y, final
+
+
+def rwkv6_apply(params: dict, x: jax.Array, cfg: RWKV6Config,
+                ctx: ShardingCtx | None,
+                state: dict | None = None) -> tuple[jax.Array, dict | None]:
+    """One RWKV6 block (time-mix + channel-mix). x: (B,T,D).
+
+    state (decode): {"shift_t","shift_c": (B,D), "wkv": (B,H,hd,hd)}.
+    T must be divisible by cfg.chunk in the parallel path (T=1 decode uses
+    the recurrent path).
+    """
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    decode = state is not None and t == 1
+
+    # ---- time mixing (on the LN'd stream, residual to raw x) ----
+    xin = layer_norm(x, params["ln1"], params["ln1_b"])
+    prev_t = state["shift_t"] if decode else None
+    xprev = _token_shift(xin, prev_t)
+    mix = params["mix"].astype(x.dtype)
+    lerp = lambda i: xin + (xprev - xin) * mix[i]
+    xr, xk, xv, xw, xg = (lerp(i) for i in range(5))
+
+    r = jnp.einsum("btd,de->bte", xr, params["wr"].astype(x.dtype))
+    k = jnp.einsum("btd,de->bte", xk, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,de->bte", xv, params["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg,
+                               params["wg"].astype(x.dtype)))
+    # data-dependent decay (the Finch contribution)
+    wlo = jnp.tanh(jnp.einsum("btd,dr->btr", xw.astype(jnp.float32),
+                              params["w_lora_a"].astype(jnp.float32)))
+    wlo = jnp.einsum("btr,rd->btd", wlo, params["w_lora_b"].astype(jnp.float32))
+    logw = -jnp.exp(params["w0"].astype(jnp.float32) + wlo)   # < 0
+
+    rh = r.reshape(b, t, h, hd)
+    kh = k.reshape(b, t, h, hd)
+    vh = v.reshape(b, t, h, hd)
+    lwh = logw.reshape(b, t, h, hd)
+
+    if decode:
+        s = state["wkv"].astype(jnp.float32)
+        w_t = jnp.exp(lwh[:, 0])                               # (B,H,hd)
+        kv = jnp.einsum("bhn,bhm->bhnm", kh[:, 0].astype(jnp.float32),
+                        vh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhnm->bhm", rh[:, 0].astype(jnp.float32),
+                       s + params["u"].astype(jnp.float32)[None, :, :, None]
+                       * kv)
+        s = s * w_t[..., None] + kv
+        y = y[:, None]                                          # (B,1,H,hd)
+        new_state = {"wkv": s.astype(state["wkv"].dtype),
+                     "shift_t": xin[:, -1, :]}
+    else:
+        s0 = (state["wkv"] if state is not None else
+              jnp.zeros((b, h, hd, hd)))
+        y, sf = _wkv_chunked(rh, kh, vh, lwh, params["u"], s0, cfg.chunk)
+        new_state = {"wkv": sf.astype(x.dtype), "shift_t": xin[:, -1, :]}
+
+    y = y.reshape(b, t, d).astype(x.dtype)
+    y = _group_norm(y, params["ln_x"], h) * g
+    out = jnp.einsum("bte,ed->btd", y, params["wo"].astype(x.dtype))
+    out = shard(out, ctx, "batch", "act_seq", "act_embed")
+    x_mid = x + out
+
+    # ---- channel mixing (on the LN'd stream) ----
+    xcin = layer_norm(x_mid, params["ln2"], params["ln2_b"])
+    prev_c = state["shift_c"] if decode else None
+    xprev = _token_shift(xcin, prev_c)
+    cmix = params["cmix"].astype(x.dtype)
+    xk2 = xcin + (xprev - xcin) * cmix[0]
+    xr2 = xcin + (xprev - xcin) * cmix[1]
+    kk = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk2, params["ck"].astype(x.dtype))))
+    kk = shard(kk, ctx, "batch", "act_seq", "act_mlp")
+    vv = jnp.einsum("btf,fd->btd", kk, params["cv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr2,
+                                   params["cr"].astype(x.dtype)))
+    x_out = x_mid + rr * vv
+
+    if state is not None:
+        new_state["shift_c"] = xcin[:, -1, :]
+        return x_out, new_state
+    return x_out, None
+
+
+def rwkv6_state_shape(cfg: RWKV6Config, batch: int) -> dict:
+    h, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return {"wkv": (batch, h, hd, hd), "shift_t": (batch, d),
+            "shift_c": (batch, d)}
+
+
+def rwkv6_decode_step(params: dict, x_t: jax.Array, state: dict,
+                      cfg: RWKV6Config, ctx: ShardingCtx | None
+                      ) -> tuple[jax.Array, dict]:
+    """x_t: (B,D) -> (y (B,D), new_state). Wraps apply with T=1."""
+    y, new_state = rwkv6_apply(params, x_t[:, None, :], cfg, ctx, state)
+    return y[:, 0, :], new_state

@@ -1,0 +1,145 @@
+"""RWKV-6 language model (rwkv6-1.6b): embed + LN0 + scanned blocks + head.
+
+Attention-free: the "KV cache" of the decode shapes is the O(1) per-layer
+recurrent state {wkv, shift_t, shift_c} — constant in sequence length,
+which is exactly why this arch (and zamba2) run the long_500k cell.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (chunked_cross_entropy, cross_entropy_loss,
+                                 dense_init, layer_norm, stacked_init)
+from repro.models.rwkv6 import (RWKV6Config, rwkv6_apply, rwkv6_axes,
+                                rwkv6_init, rwkv6_state_shape)
+from repro.sharding.logical import A, ShardingCtx, shard
+
+__all__ = ["RWKVLMConfig", "RWKVLM"]
+
+
+@dataclass(frozen=True)
+class RWKVLMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 64
+    chunk: int = 64
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"
+
+    @property
+    def block_cfg(self) -> RWKV6Config:
+        return RWKV6Config(d_model=self.d_model, d_ff=self.d_ff,
+                           head_dim=self.head_dim, chunk=self.chunk)
+
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        r = self.block_cfg.lora_rank
+        per_layer = 5 * d * d + 2 * d * r + d * f * 2 + 13 * d  # approx
+        return self.n_layers * per_layer + 2 * self.vocab * d
+
+    active_param_count = param_count
+
+
+class RWKVLM:
+    def __init__(self, cfg: RWKVLMConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(key, 3)
+        return {
+            "embedding": dense_init(ke, (cfg.vocab, cfg.d_model), cfg.d_model),
+            "ln0": jnp.ones((cfg.d_model,)),
+            "ln0_b": jnp.zeros((cfg.d_model,)),
+            "layers": stacked_init(
+                lambda k: rwkv6_init(k, cfg.block_cfg), kl, cfg.n_layers),
+            "final_norm": jnp.ones((cfg.d_model,)),
+            "final_norm_b": jnp.zeros((cfg.d_model,)),
+            "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab), cfg.d_model),
+        }
+
+    def axes(self) -> dict:
+        layer_ax = jax.tree_util.tree_map(
+            lambda a: A("layers", *a.names), rwkv6_axes(self.cfg.block_cfg),
+            is_leaf=lambda v: isinstance(v, A))
+        return {"embedding": A("vocab", "embed"), "ln0": A(None),
+                "ln0_b": A(None), "layers": layer_ax,
+                "final_norm": A(None), "final_norm_b": A(None),
+                "lm_head": A("embed", "vocab")}
+
+    def _run(self, params: dict, x: jax.Array, ctx: ShardingCtx | None,
+             state: dict | None):
+        cfg = self.cfg
+
+        def body(xcur, xs):
+            p, st = xs
+            xcur, new_st = rwkv6_apply(p, xcur, cfg.block_cfg, ctx, st)
+            return xcur, new_st
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable,
+                prevent_cse=False)
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+        return x, new_state
+
+    def _logits(self, params: dict, x: jax.Array,
+                ctx: ShardingCtx | None) -> jax.Array:
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"])
+        logits = jnp.einsum("btd,dv->btv", x,
+                            params["lm_head"].astype(x.dtype))
+        return shard(logits.astype(jnp.float32), ctx,
+                     "batch", "act_seq", "act_vocab")
+
+    def loss(self, params: dict, batch: dict,
+             ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = params["embedding"][batch["tokens"]].astype(cfg.dtype)
+        x = layer_norm(x, params["ln0"], params["ln0_b"])
+        x = shard(x, ctx, "batch", "act_seq", "act_embed")
+        x, _ = self._run(params, x, ctx, None)
+        x = layer_norm(x, params["final_norm"], params["final_norm_b"])
+        ce = chunked_cross_entropy(x, params["lm_head"], batch["labels"],
+                                   transpose_weight=True,
+                                   mask=batch.get("loss_mask"))
+        return ce, {"ce": ce}
+
+    # ---------- serving ----------
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        """max_seq unused: RWKV state is O(1) in sequence length."""
+        cfg = self.cfg
+        shapes = rwkv6_state_shape(cfg.block_cfg, batch)
+        return {k: jnp.zeros((cfg.n_layers, *v), cfg.dtype)
+                for k, v in shapes.items()}
+
+    def cache_axes(self) -> dict:
+        return {"wkv": A("layers", "batch", "ssm_heads", None, None),
+                "shift_t": A("layers", "batch", None),
+                "shift_c": A("layers", "batch", None)}
+
+    def prefill(self, params: dict, batch: dict, cache: dict,
+                ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        x = params["embedding"][batch["tokens"]].astype(cfg.dtype)
+        x = layer_norm(x, params["ln0"], params["ln0_b"])
+        x, cache = self._run(params, x, ctx, cache)
+        logits = self._logits(params, x[:, -1:, :], ctx)
+        return logits[:, 0, :], cache
+
+    def decode_step(self, params: dict, tokens: jax.Array, pos: jax.Array,
+                    cache: dict, ctx: ShardingCtx | None = None
+                    ) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        del pos  # recurrent: position-free
+        x = params["embedding"][tokens[:, None]].astype(cfg.dtype)
+        x = layer_norm(x, params["ln0"], params["ln0_b"])
+        x, cache = self._run(params, x, ctx, cache)
+        logits = self._logits(params, x, ctx)
+        return logits[:, 0, :], cache

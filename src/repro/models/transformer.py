@@ -1,0 +1,347 @@
+"""Decoder-only transformer LM, config-assembled, scan-over-layers.
+
+Covers: dbrx (MoE top-4), llama4-scout (MoE top-1 + shared expert),
+qwen1.5 (QKV bias), command-r (parallel block, LayerNorm), qwen3 (qk_norm),
+gemma2 (local/global alternation, softcaps, sandwich norms, embed scaling),
+and the internvl2 backbone (vision-prefix embeddings).
+
+Layers are stacked on a leading L dim and driven by ``jax.lax.scan`` so the
+HLO (and compile time) is depth-independent — required for the 512-device
+dry-run. Per-layer heterogeneity (gemma2's local/global) rides through the
+scan as a traced flag array rather than as separate scans.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (chunked_cross_entropy, cross_entropy_loss,
+                                 dense_init, layer_norm, rms_norm, softcap,
+                                 stacked_init)
+from repro.models.layers import (AttnConfig, MLPConfig, attention, attn_axes,
+                                 attn_init, mlp_apply, mlp_axes, mlp_init)
+from repro.models.moe import MoEConfig, moe_apply, moe_axes, moe_init
+from repro.sharding.logical import A, ShardingCtx, shard
+
+__all__ = ["LMConfig", "TransformerLM"]
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None          # default d_model // n_heads
+    act: str = "silu"
+    gated: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"                # "rmsnorm" | "layernorm"
+    norm_plus_one: bool = False          # gemma (1+w) RMSNorm
+    sandwich_norm: bool = False          # gemma2 post-norms
+    parallel_block: bool = False         # command-r: attn ∥ mlp
+    sliding_window: int | None = None
+    local_global: bool = False           # alternate local/global (gemma2)
+    moe: MoEConfig | None = None
+    tie_embeddings: bool = True
+    embed_scale: bool = False            # gemma: × sqrt(d_model)
+    vision_prefix: bool = False          # internvl: embeds prepended
+    chunked_ce: bool = True              # online-LSE vocab-chunked loss
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"                  # "none" | "dots" | "full"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+            attn_softcap=self.attn_softcap, rope_theta=self.rope_theta)
+
+    @property
+    def mlp_cfg(self) -> MLPConfig:
+        return MLPConfig(d_model=self.d_model, d_ff=self.d_ff, act=self.act,
+                         gated=self.gated)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding included once if tied)."""
+        d, hd = self.d_model, self.hd
+        attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * hd * d
+        if self.moe is not None:
+            m = self.moe
+            ff_mults = 3 if m.gated else 2
+            ffn = m.n_experts * ff_mults * d * m.d_ff + d * m.n_experts
+            ffn += (ff_mults * d * m.d_ff * m.n_shared) if m.n_shared else 0
+        else:
+            ffn = (3 if self.gated else 2) * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        ff_mults = 3 if m.gated else 2
+        attn = d * self.hd * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * self.hd * d
+        ffn = (m.top_k + m.n_shared) * ff_mults * d * m.d_ff + d * m.n_experts
+        per_layer = attn + ffn + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+class TransformerLM:
+    """Functional decoder-only LM. All methods are pure."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # ---------- params ----------
+    def _layer_init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        p = {"attn": attn_init(k1, cfg.attn_cfg),
+             "ln1": jnp.zeros((cfg.d_model,)) if cfg.norm_plus_one
+             else jnp.ones((cfg.d_model,)),
+             "ln2": jnp.zeros((cfg.d_model,)) if cfg.norm_plus_one
+             else jnp.ones((cfg.d_model,))}
+        if cfg.moe is not None:
+            p["moe"] = moe_init(k2, cfg.moe)
+        else:
+            p["mlp"] = mlp_init(k2, cfg.mlp_cfg)
+        if cfg.sandwich_norm:
+            p["ln1_post"] = jnp.zeros((cfg.d_model,))
+            p["ln2_post"] = jnp.zeros((cfg.d_model,))
+        if cfg.norm == "layernorm":
+            p["ln1_bias"] = jnp.zeros((cfg.d_model,))
+            p["ln2_bias"] = jnp.zeros((cfg.d_model,))
+        return p
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        ke, kl, kh = jax.random.split(key, 3)
+        params = {
+            "embedding": dense_init(ke, (cfg.vocab, cfg.d_model), cfg.d_model),
+            "layers": stacked_init(self._layer_init, kl, cfg.n_layers),
+            "final_norm": jnp.zeros((cfg.d_model,)) if cfg.norm_plus_one
+            else jnp.ones((cfg.d_model,)),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab),
+                                           cfg.d_model)
+        return params
+
+    def axes(self) -> dict:
+        cfg = self.cfg
+        layer_ax: dict = {"attn": attn_axes(cfg.attn_cfg),
+                          "ln1": A(None), "ln2": A(None)}
+        if cfg.moe is not None:
+            layer_ax["moe"] = moe_axes(cfg.moe)
+        else:
+            layer_ax["mlp"] = mlp_axes(cfg.mlp_cfg)
+        if cfg.sandwich_norm:
+            layer_ax["ln1_post"] = A(None)
+            layer_ax["ln2_post"] = A(None)
+        if cfg.norm == "layernorm":
+            layer_ax["ln1_bias"] = A(None)
+            layer_ax["ln2_bias"] = A(None)
+        # prepend the stacked-layer dim to every layer annotation
+        layer_ax = jax.tree_util.tree_map(
+            lambda a: A("layers", *a.names), layer_ax,
+            is_leaf=lambda v: isinstance(v, A))
+        ax = {"embedding": A("vocab", "embed"),
+              "layers": layer_ax,
+              "final_norm": A(None)}
+        if not cfg.tie_embeddings:
+            ax["lm_head"] = A("embed", "vocab")
+        return ax
+
+    # ---------- building blocks ----------
+    def _norm(self, x, w, p, bias_name):
+        cfg = self.cfg
+        if cfg.norm == "layernorm":
+            return layer_norm(x, w, p.get(bias_name))
+        return rms_norm(x, w, plus_one=cfg.norm_plus_one)
+
+    def _block(self, p: dict, x: jax.Array, ctx: ShardingCtx | None, *,
+               q_pos: jax.Array, window_active: jax.Array | None,
+               cache_kv, cache_index):
+        """One transformer block. Returns (x, new_cache_kv, aux_loss)."""
+        cfg = self.cfg
+        h = self._norm(x, p["ln1"], p, "ln1_bias")
+        attn_out, new_kv = attention(
+            p["attn"], h, cfg.attn_cfg, ctx, q_pos=q_pos, causal=True,
+            window=cfg.sliding_window, window_active=window_active,
+            cache_kv=cache_kv, cache_index=cache_index)
+        if cfg.sandwich_norm:
+            attn_out = rms_norm(attn_out, p["ln1_post"],
+                                plus_one=cfg.norm_plus_one)
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.parallel_block:
+            # command-r: mlp on the same normed input, single residual add
+            mlp_out = mlp_apply(p["mlp"], h, cfg.mlp_cfg, ctx)
+            x = x + attn_out + mlp_out
+            return x, new_kv, aux
+        x = x + attn_out
+        h2 = self._norm(x, p["ln2"], p, "ln2_bias")
+        if cfg.moe is not None:
+            ffn_out, aux = moe_apply(p["moe"], h2, cfg.moe, ctx)
+        else:
+            ffn_out = mlp_apply(p["mlp"], h2, cfg.mlp_cfg, ctx)
+        if cfg.sandwich_norm:
+            ffn_out = rms_norm(ffn_out, p["ln2_post"],
+                               plus_one=cfg.norm_plus_one)
+        return x + ffn_out, new_kv, aux
+
+    def _layer_flags(self) -> jax.Array | None:
+        cfg = self.cfg
+        if cfg.local_global:
+            # even layers local (sliding window), odd layers global — gemma2
+            return jnp.arange(cfg.n_layers) % 2 == 0
+        if cfg.sliding_window is not None:
+            return jnp.ones((cfg.n_layers,), bool)
+        return None
+
+    def _run_layers(self, params: dict, x: jax.Array,
+                    ctx: ShardingCtx | None, *, q_pos: jax.Array,
+                    cache: dict | None, cache_index) -> tuple:
+        """Scan the stacked layers. cache: {"k","v"}: (L,B,S,KV,hd) or None."""
+        cfg = self.cfg
+        flags = self._layer_flags()
+
+        def body(carry, xs):
+            xcur, aux_sum = carry
+            p, flag, kv = xs
+            cache_kv = None if kv is None else (kv["k"], kv["v"])
+            xcur, new_kv, aux = self._block(
+                p, xcur, ctx, q_pos=q_pos, window_active=flag,
+                cache_kv=cache_kv, cache_index=cache_index)
+            ys = None if new_kv is None else {"k": new_kv[0], "v": new_kv[1]}
+            return (xcur, aux_sum + aux), ys
+
+        if cfg.remat != "none":
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat == "dots" else
+                      jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(body, policy=policy,
+                                  prevent_cse=False)
+
+        xs = (params["layers"],
+              flags if flags is not None
+              else jnp.zeros((cfg.n_layers,), bool),
+              cache)
+        (x, aux), new_cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                           xs)
+        return x, aux, new_cache
+
+    # ---------- embedding / logits ----------
+    def _embed(self, params: dict, tokens: jax.Array,
+               ctx: ShardingCtx | None,
+               vision_embeds: jax.Array | None = None) -> jax.Array:
+        cfg = self.cfg
+        x = params["embedding"][tokens].astype(cfg.dtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model, cfg.dtype) ** 0.5
+        if cfg.vision_prefix and vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(cfg.dtype), x], axis=1)
+        return shard(x, ctx, "batch", "act_seq", "act_embed")
+
+    def _logits(self, params: dict, x: jax.Array,
+                ctx: ShardingCtx | None) -> jax.Array:
+        cfg = self.cfg
+        x = self._norm(x, params["final_norm"], params, "final_norm_bias")
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x,
+                                params["embedding"].astype(x.dtype))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x,
+                                params["lm_head"].astype(x.dtype))
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        return shard(logits, ctx, "batch", "act_seq", "act_vocab")
+
+    # ---------- public: train ----------
+    def loss(self, params: dict, batch: dict,
+             ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        """batch: tokens (B,S), labels (B,S), optional loss_mask,
+        optional vision_embeds (B,P,D)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        vis = batch.get("vision_embeds")
+        x = self._embed(params, tokens, ctx, vis)
+        s_total = x.shape[1]
+        q_pos = jnp.broadcast_to(jnp.arange(s_total), x.shape[:2])
+        x, aux, _ = self._run_layers(params, x, ctx, q_pos=q_pos,
+                                     cache=None, cache_index=None)
+        if cfg.chunked_ce:
+            if vis is not None:
+                x = x[:, vis.shape[1]:, :]
+            x = self._norm(x, params["final_norm"], params,
+                           "final_norm_bias")
+            w = params["embedding"] if cfg.tie_embeddings \
+                else params["lm_head"]
+            ce = chunked_cross_entropy(
+                x, w, batch["labels"],
+                transpose_weight=not cfg.tie_embeddings,
+                final_softcap=cfg.final_softcap,
+                mask=batch.get("loss_mask"))
+        else:
+            logits = self._logits(params, x, ctx)
+            if vis is not None:
+                logits = logits[:, vis.shape[1]:, :]
+            ce = cross_entropy_loss(logits, batch["labels"],
+                                    batch.get("loss_mask"))
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ---------- public: serve ----------
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        shp = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shp, cfg.dtype), "v": jnp.zeros(shp, cfg.dtype)}
+
+    def cache_axes(self) -> dict:
+        return {"k": A("layers", "batch", "kv_seq", "kv_heads", None),
+                "v": A("layers", "batch", "kv_seq", "kv_heads", None)}
+
+    def prefill(self, params: dict, batch: dict, cache: dict,
+                ctx: ShardingCtx | None = None) -> tuple[jax.Array, dict]:
+        """Run the prompt, fill the cache; returns (last-token logits, cache)."""
+        tokens = batch["tokens"]
+        vis = batch.get("vision_embeds")
+        x = self._embed(params, tokens, ctx, vis)
+        s = x.shape[1]
+        q_pos = jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+        x, _, cache = self._run_layers(params, x, ctx, q_pos=q_pos,
+                                       cache=cache,
+                                       cache_index=jnp.zeros((), jnp.int32))
+        logits = self._logits(params, x[:, -1:, :], ctx)
+        return logits[:, 0, :], cache
+
+    def decode_step(self, params: dict, tokens: jax.Array, pos: jax.Array,
+                    cache: dict, ctx: ShardingCtx | None = None
+                    ) -> tuple[jax.Array, dict]:
+        """tokens (B,) int32, pos () int32 -> (logits (B,V), cache)."""
+        x = self._embed(params, tokens[:, None], ctx)
+        q_pos = jnp.broadcast_to(pos[None, None], x.shape[:2])
+        x, _, cache = self._run_layers(params, x, ctx, q_pos=q_pos,
+                                       cache=cache, cache_index=pos)
+        logits = self._logits(params, x, ctx)
+        return logits[:, 0, :], cache

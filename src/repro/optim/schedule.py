@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr: float, warmup_steps: int):
+    frac = jnp.minimum(step.astype(jnp.float32) / max(warmup_steps, 1), 1.0)
+    return base_lr * frac
+
+
+def cosine_schedule(step, base_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1):
+    """Linear warmup then cosine decay to min_ratio × base_lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps)
+                    / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

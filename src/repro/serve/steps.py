@@ -1,0 +1,38 @@
+"""serve_step factories: prefill + single-token decode (+ greedy sampling).
+
+The decode step is the paper's operating point: batch-latency-first
+inference (Fig. 9's batch=1 advantage). Quantized-weight serving
+(core.quantize int8 + kernels/qmatmul) and the int8 KV cache plug in here.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill_step", "make_decode_step", "greedy_sample"]
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(model, ctx=None) -> Callable:
+    def prefill_step(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache, ctx)
+        return greedy_sample(logits), cache
+
+    return prefill_step
+
+
+def make_decode_step(model, ctx=None, sample: bool = True) -> Callable:
+    """decode_step(params, tokens (B,), pos (), cache) ->
+    (next tokens (B,) | logits, cache)."""
+
+    def decode_step(params, tokens, pos, cache):
+        logits, cache = model.decode_step(params, tokens, pos, cache, ctx)
+        out = greedy_sample(logits) if sample else logits
+        return out, cache
+
+    return decode_step

@@ -1,0 +1,196 @@
+"""Logical axis names -> mesh PartitionSpecs, with divisibility guards.
+
+Every tensor in the framework is annotated with *logical* axis names
+("batch", "heads", "mlp", …); rules map each name to an ordered list of
+candidate mesh axes. ``spec_for`` resolves a concrete PartitionSpec for a
+given shape on a given mesh, taking the first candidate whose size divides
+the dimension (and which is not already consumed by an earlier dim) — so
+every (arch × shape × mesh) combination lowers even when e.g. kv_heads=8
+cannot split over model=16.
+
+Parallelism taxonomy realized through the rules (DESIGN.md §4):
+  DP    batch          -> ('pod', 'data')
+  FSDP  embed (params) -> 'data'    (ZeRO-3: stacked-layer params split)
+  TP    heads/mlp/vocab/conv_out -> 'model'   (paper C1 output-channel)
+  TP-in conv_in/mlp_in -> 'model'   (paper C1 input-channel, psum variant)
+  EP    expert         -> 'model'
+  SP    kv_seq         -> 'data' in SP_DECODE_RULES (long-context decode)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["A", "ShardingRules", "ShardingCtx", "DEFAULT_RULES",
+           "SP_DECODE_RULES", "spec_for", "shard", "param_specs",
+           "param_shardings"]
+
+
+class A:
+    """Logical-axes annotation for one param — deliberately NOT a pytree
+    container (plain tuples would be flattened by tree_map), so an axes
+    pytree mirrors the param pytree with ``A`` leaves."""
+
+    __slots__ = ("names",)
+
+    def __init__(self, *names: str | None):
+        self.names = names
+
+    def __repr__(self) -> str:
+        return f"A{self.names!r}"
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, A) and self.names == other.names
+
+    def __hash__(self) -> int:
+        return hash(self.names)
+
+# logical axis -> ordered candidates; each candidate is a mesh-axis name or a
+# tuple of mesh-axis names (used together, sizes multiply).
+Rules = Mapping[str, Sequence[Any]]
+
+_BASE: dict[str, Sequence[Any]] = {
+    # activations
+    "batch":      [("pod", "data"), "data"],
+    # attention-internal batch dim: defaults to the DP axes; archs whose
+    # head count does not divide the TP degree override this to
+    # [("data","model"), …] so attention distributes over ALL chips as
+    # extra DP instead of replicating per model rank (DESIGN.md §4).
+    "attn_batch": [("pod", "data"), "data"],
+    "act_seq":    [],                 # unsharded by default
+    "act_embed":  [],
+    "act_heads":  ["model"],
+    "act_kv":     ["model"],
+    "act_mlp":    ["model"],
+    "act_vocab":  ["model"],
+    "act_expert": ["model"],
+    # KV-cache sequence dim: sharded over 'model' by default — with GQA
+    # (kv_heads < model size) the head dim cannot absorb the model axis, and
+    # an unsharded 32k cache is tens of GB/device. XLA turns the softmax over
+    # the sharded T dim into small psums (distributed flash-decode).
+    "kv_seq":     ["model"],
+    # params — weight matrices: TP axis first, then FSDP over 'data'
+    "embed":      ["data"],           # FSDP/ZeRO-3 on the d_model dim
+    "vocab":      ["model"],
+    "heads":      ["model"],
+    "kv_heads":   ["model"],
+    "head":       [],
+    "mlp":        ["model"],
+    "expert":     ["model"],
+    "conv_out":   ["model"],          # paper C1 output-channel parallel
+    "conv_in":    [],                 # becomes 'model' in input-parallel mode
+    "conv_spatial": [],
+    "layers":     [],                 # stacked scan dim: never sharded
+    "ssm_state":  [],
+    "ssm_heads":  ["model"],
+    "ssm_inner":  ["model"],
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    table: Rules = field(default_factory=lambda: dict(_BASE))
+
+    def with_overrides(self, **kw: Sequence[Any]) -> "ShardingRules":
+        t = dict(self.table)
+        t.update(kw)
+        return ShardingRules(t)
+
+
+DEFAULT_RULES = ShardingRules()
+# long-context decode: shard the KV-cache sequence dim over BOTH axes
+# (context/sequence parallelism); batch=1 cells don't use 'data' for batch.
+SP_DECODE_RULES = DEFAULT_RULES.with_overrides(
+    kv_seq=[("data", "model"), "data"], batch=[("pod",)])
+# paper Eq. (7) input-channel-parallel mode for conv / row-parallel matmul
+INPUT_PARALLEL_RULES = DEFAULT_RULES.with_overrides(
+    conv_in=["model"], conv_out=[])
+
+
+def _axis_size(mesh: Mesh, cand: Any) -> int:
+    shape = dict(mesh.shape)  # works for Mesh and AbstractMesh
+    if isinstance(cand, tuple):
+        size = 1
+        for a in cand:
+            size *= shape[a]
+        return size
+    return shape[cand]
+
+
+def _cand_axes(cand: Any) -> tuple[str, ...]:
+    return cand if isinstance(cand, tuple) else (cand,)
+
+
+def spec_for(mesh: Mesh, shape: Sequence[int], names: Sequence[str | None],
+             rules: ShardingRules = DEFAULT_RULES) -> P:
+    """Resolve a PartitionSpec for ``shape`` with logical ``names``.
+
+    Guards: a mesh axis is used at most once; a candidate is taken only if
+    its total size divides the dim. None / unknown names -> replicated dim.
+    """
+    assert len(shape) == len(names), (shape, names)
+    used: set[str] = set()
+    out: list[Any] = []
+    for dim, name in zip(shape, names):
+        entry = None
+        if name is not None:
+            for cand in rules.table.get(name, []):
+                axes = _cand_axes(cand)
+                if any(a not in mesh.axis_names for a in axes):
+                    continue
+                if any(a in used for a in axes):
+                    continue
+                size = _axis_size(mesh, cand)
+                if size == 1:       # trivial axis: keep the spec clean
+                    continue
+                if dim % size != 0 or dim == 0:
+                    continue
+                entry = cand
+                used.update(axes)
+                break
+        out.append(entry)
+    # trim trailing Nones for tidier specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+@dataclass(frozen=True)
+class ShardingCtx:
+    """Threaded through model code; ``shard`` is a no-op when mesh is None
+    (single-device tests) so models run unmodified on CPU."""
+
+    mesh: Mesh | None = None
+    rules: ShardingRules = DEFAULT_RULES
+
+    def with_rules(self, rules: ShardingRules) -> "ShardingCtx":
+        return replace(self, rules=rules)
+
+
+def shard(x: jax.Array, ctx: ShardingCtx | None, *names: str | None
+          ) -> jax.Array:
+    """Annotate ``x`` with a sharding constraint resolved from logical names."""
+    if ctx is None or ctx.mesh is None:
+        return x
+    spec = spec_for(ctx.mesh, x.shape, names, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def param_specs(shapes: Any, axes: Any, mesh: Mesh,
+                rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """Map a pytree of ShapeDtypeStructs + a matching pytree of ``A``
+    annotations to a pytree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda s, a: spec_for(mesh, s.shape, a.names, rules), shapes, axes)
+
+
+def param_shardings(shapes: Any, axes: Any, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES) -> Any:
+    specs = param_specs(shapes, axes, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), specs,
+        is_leaf=lambda v: isinstance(v, P))

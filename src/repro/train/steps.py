@@ -1,0 +1,83 @@
+"""train_step factory: grad (+ microbatched accumulation) + AdamW update.
+
+Microbatching splits the global batch on the leading axis and accumulates
+fp32 gradients with a lax.scan — the standard memory/efficiency trade;
+combined with remat="full" layers this is what lets the 132B MoE configs
+fit the dry-run memory budget. Collectives (grad psum over the data/pod
+axes) are inserted by the XLA SPMD partitioner from the shardings; the
+scan-over-layers structure lets FSDP all-gathers overlap with compute.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step"]
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, ctx=None,
+                    microbatches: int = 1,
+                    cast_params_once: bool = False) -> Callable:
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics). ``batch`` leaves have a leading
+    global-batch dim divisible by ``microbatches``.
+
+    cast_params_once: cast fp32 matrices to the model compute dtype BEFORE
+    the microbatch loop, so FSDP/TP all-gathers move bf16 (half the
+    collective bytes) and the per-use casts become no-ops. Gradients then
+    materialize in bf16 and are accumulated in fp32 (standard
+    mixed-precision). §Perf qwen3 iteration 6.
+    """
+
+    compute_dtype = getattr(model.cfg, "dtype", None)
+
+    def maybe_cast(params):
+        if not cast_params_once or compute_dtype is None:
+            return params
+        return jax.tree_util.tree_map(
+            lambda p: p.astype(compute_dtype)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.loss(maybe_cast(params), mb, ctx)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                g_acc, loss_acc = acc
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, loss_acc + l), m
+
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m.mean(), metrics)
+
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step

@@ -1,0 +1,80 @@
+"""Paper §III.B.1: odd-even addition tree — exact resource laws + value
+equivalence (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.addtree import (classic_padded_sum, classic_tree_resources,
+                                level_widths, pairwise_sum, tree_resources)
+
+
+class TestPaperNumbers:
+    def test_eta9_ours(self):
+        """Fig. 5 worked example: 8 adders, 20 registers, 4 cycles."""
+        r = tree_resources(9)
+        assert (r.adders, r.registers, r.cycles) == (8, 20, 4)
+        assert r.padding_waste == 0.0
+
+    def test_eta9_classic(self):
+        """Fig. 4 counterpart: 15 adders, 31 registers, 4 cycles."""
+        c = classic_tree_resources(9)
+        assert (c.adders, c.registers, c.cycles) == (15, 31, 4)
+        assert c.padded_inputs == 16
+
+    @pytest.mark.parametrize("eta", [144, 256])
+    def test_paper_144_vs_256(self, eta):
+        """§III.B.1: both 144 and 256 inputs cost the classic tree 255
+        adders / 511 registers / 8 cycles — the paper's waste argument."""
+        c = classic_tree_resources(eta)
+        assert (c.adders, c.registers, c.cycles) == (255, 511, 8)
+
+    def test_ours_strictly_cheaper_offpow2(self):
+        for eta in range(3, 300):
+            ours, classic = tree_resources(eta), classic_tree_resources(eta)
+            assert ours.cycles == classic.cycles          # same depth
+            assert ours.adders <= classic.adders
+            if eta & (eta - 1):                           # not a power of 2
+                assert ours.adders < classic.adders
+
+
+class TestLevelWidths:
+    @given(st.integers(1, 4096))
+    @settings(max_examples=200, deadline=None)
+    def test_halving_law(self, eta):
+        w = level_widths(eta)
+        assert w[0] == eta and w[-1] == 1
+        for a, b in zip(w, w[1:]):
+            assert b == (a + 1) // 2
+        assert tree_resources(eta).adders == eta - 1 if eta > 1 else True
+
+
+class TestValues:
+    @given(st.integers(1, 257), st.integers(1, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_pairwise_equals_sum(self, eta, rows):
+        x = jax.random.normal(jax.random.PRNGKey(eta * 131 + rows),
+                              (rows, eta))
+        np.testing.assert_allclose(pairwise_sum(x, -1), x.sum(-1),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(st.integers(1, 130))
+    @settings(max_examples=30, deadline=None)
+    def test_classic_equals_pairwise(self, eta):
+        x = jax.random.normal(jax.random.PRNGKey(eta), (4, eta))
+        np.testing.assert_allclose(classic_padded_sum(x, -1),
+                                   pairwise_sum(x, -1), rtol=1e-5, atol=1e-5)
+
+    def test_grad(self):
+        x = jnp.arange(9.0).reshape(1, 9)
+        g = jax.grad(lambda v: pairwise_sum(v, -1).sum())(x)
+        np.testing.assert_allclose(g, jnp.ones_like(x))
+
+    def test_axis_arg(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (5, 7, 3))
+        np.testing.assert_allclose(pairwise_sum(x, 1), x.sum(1),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            pairwise_sum(x, 0, keepdims=True), x.sum(0, keepdims=True),
+            rtol=1e-5, atol=1e-5)

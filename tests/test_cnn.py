@@ -1,0 +1,92 @@
+"""The paper's CNN (Tab. I): parameter counts, shapes, quantized paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestTableI:
+    def test_per_layer_param_counts(self):
+        """Paper Tab. I: conv1 150, conv2 10,820, fc 3,210."""
+        cfg = PaperCNNConfig()
+        c1 = 1 * 3 * 3 * 15 + 15
+        c2 = 15 * 6 * 6 * 20 + 20
+        fc = cfg.feature_sizes()[2] * 10 + 10
+        assert c1 == 150        # paper counts conv1 as 150
+        assert c2 == 10820
+        assert fc == 3210
+        assert cfg.param_count() == c1 + c2 + fc
+
+    def test_feature_map_sizes(self):
+        """28 -> conv3 -> 26 -> pool -> 13 -> conv6 -> 8 -> pool -> 4."""
+        cfg = PaperCNNConfig()
+        s1, s2, fc_in = cfg.feature_sizes()
+        assert (s1, s2, fc_in) == (13, 4, 320)
+
+    def test_forward_shapes(self):
+        m = PaperCNN(PaperCNNConfig())
+        p = m.init(KEY)
+        x = jax.random.normal(KEY, (4, 1, 28, 28))
+        logits = m.forward(p, x)
+        assert logits.shape == (4, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_flops_per_image(self):
+        cfg = PaperCNNConfig()
+        # conv1: 2*15*1*9*26*26 ; conv2: 2*20*15*36*8*8 ; fc: 2*320*10
+        want = 2 * 15 * 9 * 26 * 26 + 2 * 20 * 15 * 36 * 64 + 2 * 320 * 10
+        assert cfg.flops_per_image() == want
+
+
+class TestPaths:
+    def test_all_paths_agree(self):
+        """ref (paper dataflow), im2col (MXU form), kernel (Pallas) produce
+        the same logits."""
+        x = jax.random.normal(KEY, (2, 1, 28, 28))
+        outs = {}
+        p0 = None
+        for path in ("im2col", "ref", "kernel"):
+            m = PaperCNN(PaperCNNConfig(path=path))
+            p = m.init(KEY) if p0 is None else p0
+            p0 = p
+            outs[path] = np.asarray(m.forward(p, x))
+        np.testing.assert_allclose(outs["ref"], outs["im2col"],
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(outs["kernel"], outs["im2col"],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_qformat_quantization_small_error(self):
+        """Q8.8 (paper 16-bit fixed) logits stay close to float logits —
+        the paper's accuracy-preservation claim at the logit level."""
+        x = jax.random.normal(KEY, (4, 1, 28, 28))
+        m_f = PaperCNN(PaperCNNConfig())
+        p = m_f.init(KEY)
+        m_q = PaperCNN(PaperCNNConfig(quant="qformat"))
+        lf = np.asarray(m_f.forward(p, x))
+        lq = np.asarray(m_q.forward(p, x))
+        assert np.abs(lf - lq).max() < 0.15
+        assert (lf.argmax(-1) == lq.argmax(-1)).mean() >= 0.75
+
+    def test_int8_quantization(self):
+        x = jax.random.normal(KEY, (4, 1, 28, 28))
+        m_f = PaperCNN(PaperCNNConfig())
+        p = m_f.init(KEY)
+        m_q = PaperCNN(PaperCNNConfig(quant="int8"))
+        lf = np.asarray(m_f.forward(p, x))
+        lq = np.asarray(m_q.forward(p, x))
+        assert np.abs(lf - lq).max() < 0.2
+
+    def test_loss_and_grad(self):
+        m = PaperCNN(PaperCNNConfig())
+        p = m.init(KEY)
+        batch = {"images": jax.random.normal(KEY, (8, 1, 28, 28)),
+                 "labels": jnp.arange(8) % 10}
+        loss, metrics = m.loss(p, batch)
+        assert np.isfinite(float(loss)) and 0 <= float(metrics["accuracy"]) <= 1
+        g = jax.grad(lambda q: m.loss(q, batch)[0])(p)
+        for leaf in jax.tree_util.tree_leaves(g):
+            assert np.isfinite(np.asarray(leaf)).all()

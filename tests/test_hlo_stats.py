@@ -1,0 +1,59 @@
+"""Loop-aware HLO analyzer vs analytic ground truth on a compiled module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_stats import analyze_hlo
+
+
+def test_scan_trip_count_multiplies_flops():
+    """A scan of L matmuls must count L × the per-step dot flops (XLA's own
+    cost_analysis counts the body once — the bug this analyzer fixes)."""
+    L, N = 8, 64
+    ws = jax.random.normal(jax.random.PRNGKey(0), (L, N, N))
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (N, N))
+    compiled = jax.jit(f).lower(x, ws).compile()
+    stats = analyze_hlo(compiled.as_text())
+    want = 2 * N * N * N * L
+    assert want * 0.95 <= stats.dot_flops <= want * 1.3, \
+        (stats.dot_flops, want)
+
+
+def test_plain_dot_flops():
+    a = jax.random.normal(jax.random.PRNGKey(0), (128, 256))
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    stats = analyze_hlo(compiled.as_text())
+    want = 2 * 128 * 256 * 64
+    assert want * 0.99 <= stats.dot_flops <= want * 1.05
+
+
+def test_bytes_scale_with_trip_count():
+    L, N = 4, 32
+    ws = jnp.ones((L, N, N))
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    one = jax.jit(f).lower(jnp.ones((N, N)), ws[:1]).compile()
+    many = jax.jit(f).lower(jnp.ones((N, N)), ws).compile()
+    s1 = analyze_hlo(one.as_text())
+    sL = analyze_hlo(many.as_text())
+    assert sL.flops > 2.5 * s1.flops  # roughly L× (entry overhead aside)
+
+
+def test_no_collectives_single_device():
+    compiled = jax.jit(lambda x: x * 2).lower(jnp.ones((8,))).compile()
+    stats = analyze_hlo(compiled.as_text())
+    assert stats.collective_bytes == 0

@@ -1,0 +1,83 @@
+"""Paper C4: fixed-point / int8 quantization properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (QFormat, dequantize_int8, fake_quant_int8,
+                                 quantize_int8, quantize_tree)
+
+
+class TestQFormat:
+    def test_paper_q88(self):
+        q = QFormat()  # Q8.8 = the paper's 16-bit fixed point
+        assert q.total_bits == 16
+        assert q.step == pytest.approx(2 ** -8)
+        assert q.max_val == pytest.approx(127.99609375)
+        assert q.min_val == -128.0
+
+    def test_lattice_and_saturation(self):
+        q = QFormat()
+        v = jnp.array([0.0039062, -300.0, 300.0, 1.0, -0.5])
+        out = q.quantize(v)
+        assert out[1] == q.min_val and out[2] == q.max_val
+        # every output is an exact multiple of the step
+        np.testing.assert_allclose(np.asarray(out) / q.step,
+                                   np.round(np.asarray(out) / q.step))
+
+    @given(st.integers(2, 12), st.integers(0, 12))
+    @settings(max_examples=40, deadline=None)
+    def test_idempotent(self, ib, fb):
+        q = QFormat(ib, fb)
+        x = jax.random.normal(jax.random.PRNGKey(ib * 13 + fb), (64,)) * 3
+        once = q.quantize(x)
+        np.testing.assert_array_equal(once, q.quantize(once))
+
+    def test_int_roundtrip(self):
+        q = QFormat()
+        x = jax.random.normal(jax.random.PRNGKey(0), (128,)) * 10
+        codes = q.quantize_int(x)
+        assert codes.dtype == jnp.int32
+        np.testing.assert_allclose(q.dequantize_int(codes), q.quantize(x),
+                                   atol=1e-7)
+
+    def test_error_bound(self):
+        """|x - Q(x)| <= step/2 inside the representable range."""
+        q = QFormat()
+        x = jax.random.uniform(jax.random.PRNGKey(1), (1000,),
+                               minval=-100, maxval=100)
+        err = jnp.abs(q.quantize(x) - x)
+        assert float(err.max()) <= q.step / 2 + 1e-9
+
+
+class TestInt8:
+    @given(st.integers(1, 64), st.integers(1, 64))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_error(self, r, c):
+        x = jax.random.normal(jax.random.PRNGKey(r * 101 + c), (r, c))
+        qt = quantize_int8(x, axis=-1)
+        assert qt.codes.dtype == jnp.int8
+        back = dequantize_int8(qt)
+        amax = np.abs(np.asarray(x)).max(axis=-1, keepdims=True)
+        # symmetric int8: error <= scale/2 = amax/254 per row
+        assert (np.abs(np.asarray(back - x)) <= amax / 254 + 1e-7).all()
+
+    def test_per_tensor(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 8)) * 5
+        qt = quantize_int8(x, axis=None)
+        assert qt.scale.shape == ()
+        assert int(jnp.abs(qt.codes).max()) == 127
+
+    def test_fake_quant_straight_through(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+        g = jax.grad(lambda v: fake_quant_int8(v).sum())(x)
+        np.testing.assert_allclose(g, jnp.ones_like(x))
+
+    def test_quantize_tree_skips_small(self):
+        tree = {"w": jnp.ones((32, 32)), "b": jnp.ones((32,)),
+                "scalar": jnp.ones(())}
+        qt = quantize_tree(tree)
+        assert hasattr(qt["w"], "codes")
+        assert not hasattr(qt["b"], "codes")
+        assert not hasattr(qt["scalar"], "codes")

@@ -1,0 +1,153 @@
+"""Training substrate: optimizer math, microbatch equivalence, loss curve."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import SyntheticTextConfig, SyntheticTextIterator
+from repro.models.transformer import LMConfig, TransformerLM
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.train.steps import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestAdamW:
+    def test_matches_manual_reference(self):
+        """One AdamW step vs a hand-written numpy reference."""
+        cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.95, eps=1e-8,
+                          weight_decay=0.1, clip_norm=None, warmup_steps=0,
+                          total_steps=100, min_lr_ratio=1.0)
+        p = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]])}
+        g = {"w": jnp.array([[0.1, 0.2], [-0.3, 0.4]])}
+        st = adamw_init(p)
+        newp, newst, _ = adamw_update(g, st, p, cfg)
+
+        m = 0.1 * np.asarray(g["w"])
+        v = 0.05 * np.asarray(g["w"]) ** 2
+        mhat = m / (1 - 0.9)
+        vhat = v / (1 - 0.95)
+        upd = mhat / (np.sqrt(vhat) + 1e-8) + 0.1 * np.asarray(p["w"])
+        want = np.asarray(p["w"]) - 1e-2 * upd
+        np.testing.assert_allclose(np.asarray(newp["w"]), want, rtol=1e-5)
+        assert int(newst["step"]) == 1
+
+    def test_no_decay_on_vectors(self):
+        cfg = AdamWConfig(lr=1e-2, clip_norm=None, warmup_steps=0,
+                          weight_decay=1.0, total_steps=10, min_lr_ratio=1.0)
+        p = {"b": jnp.ones((4,))}
+        g = {"b": jnp.zeros((4,))}
+        newp, _, _ = adamw_update(g, adamw_init(p), p, cfg)
+        np.testing.assert_allclose(newp["b"], p["b"])  # no grad, no decay
+
+    def test_clip(self):
+        tree = {"a": jnp.full((3,), 4.0), "b": jnp.full((4,), 3.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        np.testing.assert_allclose(float(norm), np.sqrt(48 + 36), rtol=1e-6)
+        np.testing.assert_allclose(float(global_norm(clipped)), 1.0,
+                                   rtol=1e-5)
+
+    def test_schedule(self):
+        lr0 = cosine_schedule(jnp.asarray(0), 1.0, 10, 100)
+        lr_w = cosine_schedule(jnp.asarray(10), 1.0, 10, 100)
+        lr_end = cosine_schedule(jnp.asarray(100), 1.0, 10, 100,
+                                 min_ratio=0.1)
+        assert float(lr0) == 0.0
+        assert float(lr_w) == pytest.approx(1.0)
+        assert float(lr_end) == pytest.approx(0.1, abs=1e-6)
+
+
+def _tiny_model():
+    cfg = LMConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                   n_kv_heads=4, d_ff=64, vocab=64, dtype=jnp.float32,
+                   remat="none")
+    return TransformerLM(cfg)
+
+
+class TestTrainStep:
+    def test_microbatch_equivalence(self):
+        """grad accumulation over 4 microbatches == single big batch."""
+        model = _tiny_model()
+        params = model.init(KEY)
+        opt_cfg = AdamWConfig(lr=1e-3, clip_norm=None, warmup_steps=0,
+                              total_steps=10, min_lr_ratio=1.0)
+        toks = jax.random.randint(KEY, (8, 16), 0, 64)
+        batch = {"tokens": toks, "labels": toks}
+        st1 = make_train_step(model, opt_cfg, microbatches=1)
+        st4 = make_train_step(model, opt_cfg, microbatches=4)
+        o = adamw_init(params)
+        p1, o1, m1 = st1(params, o, batch)
+        p4, o4, m4 = st4(params, adamw_init(params), batch)
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+        np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                                   rtol=1e-4)
+
+    def test_cast_params_once_equivalent(self):
+        """bf16-cast-before-loop path == per-use-cast path (fp32 models:
+        identity; here we check numerical agreement on a bf16 model)."""
+        cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                       n_kv_heads=4, d_ff=64, vocab=64,
+                       dtype=jnp.bfloat16, remat="none")
+        model = TransformerLM(cfg)
+        params = model.init(KEY)
+        toks = jax.random.randint(KEY, (4, 16), 0, 64)
+        batch = {"tokens": toks, "labels": toks}
+        opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+        _, _, m0 = make_train_step(model, opt_cfg)(params,
+                                                   adamw_init(params), batch)
+        _, _, m1 = make_train_step(model, opt_cfg, cast_params_once=True)(
+            params, adamw_init(params), batch)
+        np.testing.assert_allclose(float(m0["loss"]), float(m1["loss"]),
+                                   rtol=5e-3)
+
+    def test_loss_decreases(self):
+        """A few hundred steps on the Markov stream must cut the loss well
+        below the unigram entropy — the pipeline is learnable end-to-end."""
+        model = _tiny_model()
+        params = model.init(KEY)
+        opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=150)
+        data = SyntheticTextIterator(
+            SyntheticTextConfig(vocab=64, seq_len=16, global_batch=16))
+        step = jax.jit(make_train_step(model, opt_cfg))
+        opt = adamw_init(params)
+        first = None
+        for i in range(120):
+            batch = data.next_batch()
+            params, opt, metrics = step(params, opt, batch)
+            if first is None:
+                first = float(metrics["loss"])
+        last = float(metrics["loss"])
+        assert np.isfinite(last)
+        # Markov chain with branching 4 has >= log(4)=1.39 nats entropy;
+        # untrained ~ log(64)=4.16. Require clear learning progress.
+        assert last < first - 1.0, (first, last)
+
+
+class TestDataPipeline:
+    def test_deterministic_and_resumable(self):
+        cfg = SyntheticTextConfig(vocab=64, seq_len=8, global_batch=4)
+        it1 = SyntheticTextIterator(cfg)
+        b1 = [it1.next_batch() for _ in range(3)]
+        state = it1.state_dict()
+        b_next = it1.next_batch()
+        # restore from state: replays the same step-3 batch
+        it2 = SyntheticTextIterator.from_state(cfg, state)
+        b_replay = it2.next_batch()
+        np.testing.assert_array_equal(np.asarray(b_next["tokens"]),
+                                      np.asarray(b_replay["tokens"]))
+        # full determinism from scratch
+        it3 = SyntheticTextIterator(cfg)
+        np.testing.assert_array_equal(np.asarray(b1[0]["tokens"]),
+                                      np.asarray(it3.next_batch()["tokens"]))
+
+    def test_labels_are_next_tokens(self):
+        cfg = SyntheticTextConfig(vocab=64, seq_len=8, global_batch=2)
+        b = SyntheticTextIterator(cfg).next_batch()
+        # markov property: label t == token t+1
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["labels"][:, :-1]))

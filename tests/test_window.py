@@ -1,0 +1,109 @@
+"""Paper §III.B.2: window pipeline — cycle-exact line-buffer law +
+conv-oracle equivalence against jax.lax (independent second oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.window import (LineBufferSim, conv2d_im2col, conv2d_ref,
+                               conv_output_size, extract_windows,
+                               fill_latency, reuse_ratio)
+
+
+class TestLaws:
+    def test_output_size_eq_1_2(self):
+        """Paper Eq. (1)/(2) with the worked example: 5x5 input, 3x3 kernel,
+        stride 2 -> 2x2 output."""
+        assert conv_output_size(5, 3, 2) == 2
+        assert conv_output_size(28, 3, 1) == 26
+        assert conv_output_size(13, 6, 1) == 8
+
+    def test_fill_latency_law(self):
+        """T_u = (K-1)W + K - 1 (Fig. 8)."""
+        assert fill_latency(3, 8) == 2 * 8 + 2
+        assert fill_latency(6, 13) == 5 * 13 + 5
+
+    def test_reuse_ratio(self):
+        """(K-1)/K shared data between adjacent windows (Fig. 6)."""
+        assert reuse_ratio(3) == pytest.approx(2 / 3)
+        assert reuse_ratio(12) == pytest.approx(11 / 12)
+
+
+class TestLineBufferSim:
+    @pytest.mark.parametrize("k,w,h", [(3, 8, 6), (2, 5, 4), (3, 3, 5),
+                                       (4, 10, 7), (6, 13, 13)])
+    def test_cycle_exact(self, k, w, h):
+        img = np.arange(h * w, dtype=np.float32).reshape(h, w)
+        sim = LineBufferSim(k, w)
+        wins = list(sim.run(img))
+        ho, wo = h - k + 1, w - k + 1
+        # II=1: exactly one valid window per valid cycle, Ho*Wo total
+        assert len(wins) == ho * wo
+        # first valid window appears the cycle after T_u
+        assert wins[0][0] == fill_latency(k, w) + 1
+        # every window content is exact
+        for cyc, i, j, win in wins:
+            np.testing.assert_array_equal(win, img[i:i + k, j:j + k])
+        # paper's landmarks: cycle K*W holds x_(W0); cycle H*W holds the last
+        bycycle = {c: (i, j) for c, i, j, _ in wins}
+        assert bycycle[k * w] == (0, wo - 1)
+        assert bycycle[h * w] == (ho - 1, wo - 1)
+
+    def test_storage_sizes(self):
+        """WINDOW_BUFFER K×K + SHIFT_BUFFER (K-1)×(W-K) — Fig. 7."""
+        sim = LineBufferSim(3, 10)
+        assert sim.wb.shape == (3, 3)
+        assert sim.sb.shape == (2, 7)
+
+
+class TestConvOracles:
+    def _lax(self, x, w, b, s):
+        out = jax.lax.conv_general_dilated(
+            x, w, s, "VALID", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        return out if b is None else out + b[None, :, None, None]
+
+    @pytest.mark.parametrize(
+        "b,n,h,w,m,kh,kw,sh,sw",
+        [(1, 1, 5, 5, 1, 3, 3, 2, 2),       # the paper's worked example
+         (2, 3, 11, 9, 5, 3, 3, 1, 1),
+         (2, 15, 13, 13, 20, 6, 6, 1, 1),   # paper conv2 shape
+         (1, 4, 9, 12, 7, 2, 5, 1, 2)])
+    def test_ref_and_im2col_vs_lax(self, b, n, h, w, m, kh, kw, sh, sw):
+        key = jax.random.PRNGKey(b * 7 + n)
+        x = jax.random.normal(key, (b, n, h, w))
+        wt = jax.random.normal(jax.random.PRNGKey(1), (m, n, kh, kw))
+        bias = jax.random.normal(jax.random.PRNGKey(2), (m,))
+        want = self._lax(x, wt, bias, (sh, sw))
+        np.testing.assert_allclose(conv2d_ref(x, wt, bias, (sh, sw)), want,
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(conv2d_im2col(x, wt, bias, (sh, sw)),
+                                   want, rtol=1e-4, atol=1e-4)
+
+    @given(st.integers(1, 4), st.integers(1, 3), st.integers(2, 4),
+           st.integers(1, 2), st.data())
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_shapes(self, b, n, k, s, data):
+        h = data.draw(st.integers(k, k + 6))
+        w = data.draw(st.integers(k, k + 6))
+        m = data.draw(st.integers(1, 4))
+        x = jax.random.normal(jax.random.PRNGKey(h * 31 + w), (b, n, h, w))
+        wt = jax.random.normal(jax.random.PRNGKey(3), (m, n, k, k))
+        want = self._lax(x, wt, None, (s, s))
+        np.testing.assert_allclose(conv2d_im2col(x, wt, None, (s, s)), want,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_windows_match_manual(self):
+        x = jnp.arange(2 * 1 * 4 * 5, dtype=jnp.float32).reshape(2, 1, 4, 5)
+        win = extract_windows(x, (2, 2), (1, 1))
+        assert win.shape == (2, 3, 4, 4)
+        np.testing.assert_array_equal(
+            np.asarray(win[0, 0, 0]),
+            np.asarray([x[0, 0, 0, 0], x[0, 0, 0, 1],
+                        x[0, 0, 1, 0], x[0, 0, 1, 1]]))
+
+    def test_grad_flows(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 6, 6))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 3, 3))
+        g = jax.grad(lambda w_: conv2d_im2col(x, w_, None).sum())(w)
+        assert np.isfinite(np.asarray(g)).all()
