@@ -1,0 +1,78 @@
+"""Continuous-batching throughput sweep: requests/s and tokens/s vs slot
+capacity (DESIGN.md §6; the paper's Fig. 9 occupancy argument at the
+request level).
+
+A fixed mixed-length workload is replayed through the engine at each
+capacity. The expected shape: tokens/s grows with capacity (the batched
+decode step's cost is nearly occupancy-independent, so filled slots are
+almost free) while mean occupancy tracks capacity until the workload can
+no longer keep every slot busy.
+
+Rows: ``serve_tput/cap{C},<us per engine step>,<derived metrics>``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.models.transformer import LMConfig, TransformerLM
+from repro.serve.engine import Engine, EngineConfig
+
+CAPACITIES = (1, 2, 4, 8)
+N_REQUESTS = 16
+PROMPT_LEN = 16
+DECODE_STEPS = 16
+
+
+def _workload(vocab: int, rng: np.random.RandomState):
+    # two prompt lengths so the prefill compile cache is exercised but
+    # bounded; budgets jittered so finishes interleave (refill pressure)
+    lens = rng.choice([PROMPT_LEN // 2, PROMPT_LEN], size=N_REQUESTS)
+    budgets = rng.randint(DECODE_STEPS // 2, DECODE_STEPS + 1,
+                          size=N_REQUESTS)
+    return [(rng.randint(0, vocab, size=int(l)), int(b))
+            for l, b in zip(lens, budgets)]
+
+
+def run() -> None:
+    cfg = LMConfig(name="serve-bench", n_layers=2, d_model=128, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab=256, dtype=jnp.float32,
+                   remat="none")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_seq = PROMPT_LEN + DECODE_STEPS
+    workload = _workload(cfg.vocab, np.random.RandomState(7))
+
+    for cap in CAPACITIES:
+        engine = Engine(model, params,
+                        EngineConfig(capacity=cap, max_seq=max_seq))
+        for prompt, budget in workload:
+            engine.add_request(prompt, budget)
+        # compile warmup, untimed: every distinct prompt length's prefill
+        # program plus the capacity-C decode program (first step)
+        for plen in sorted({len(p) for p, _ in workload}):
+            engine.warm_prefill(plen)
+        engine.step()
+        s = engine.stats
+        warm = s.prefill_tokens + s.decode_tokens
+        warm_reqs = len(engine.finished)
+        t0 = time.perf_counter()
+        finished = engine.run()
+        wall = time.perf_counter() - t0
+        tokens = s.prefill_tokens + s.decode_tokens - warm
+        steps = s.steps - 1
+        emit(f"serve_tput/cap{cap}",
+             wall / max(steps, 1) * 1e6,
+             f"tok_s={tokens / wall:.1f} "
+             f"req_s={(len(finished) - warm_reqs) / wall:.2f} "
+             f"occ={engine.scheduler.stats.mean_occupancy():.2f} "
+             f"util={s.decode_utilization:.2f}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,27 +1,33 @@
 """End-to-end driver #2 (the paper's operating point, Fig. 9): serve a small
-LM with batched requests — prefill + greedy decode with a KV cache — and
-sweep the batch size, reporting per-request latency and total throughput.
-The paper's finding (latency engine wins at batch=1, throughput amortizes
-at large batch) shows up as the tokens/s-vs-latency trade.
+LM through the continuous-batching engine and sweep the slot capacity.
 
-Run:  PYTHONPATH=src python examples/serve_batched.py [--decode-steps 32]
+The paper's finding — a fixed datapath wins by staying occupied, not by
+growing — shows up directly: the batched decode step costs roughly the same
+at any occupancy, so tokens/s scales with capacity while per-request
+latency stays near the capacity=1 line (contrast with static batching,
+where every request waits for the slowest member of its batch).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--requests 16]
 """
 import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.transformer import LMConfig, TransformerLM
-from repro.serve.steps import make_decode_step, make_prefill_step
+from repro.serve.engine import Engine, EngineConfig
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--decode-steps", type=int, default=32)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--batches", type=int, nargs="*",
-                    default=[1, 2, 4, 8, 16])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--decode-steps", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--capacities", type=int, nargs="*",
+                    default=[1, 2, 4, 8])
+    ap.add_argument("--kv-quant", choices=("none", "int8"), default="none")
     args = ap.parse_args()
 
     cfg = LMConfig(name="serve-demo", n_layers=4, d_model=256, n_heads=8,
@@ -29,42 +35,36 @@ def main() -> None:
                    remat="none")
     model = TransformerLM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    prefill = jax.jit(make_prefill_step(model))
-    decode = jax.jit(make_decode_step(model))
     max_seq = args.prompt_len + args.decode_steps
 
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, size=args.prompt_len)
+               for _ in range(args.requests)]
+
     print(f"model: {cfg.param_count() / 1e6:.1f}M params | "
-          f"prompt {args.prompt_len} | decode {args.decode_steps}")
-    print(f"{'batch':>6} {'prefill_ms':>11} {'ms/token':>9} "
-          f"{'tok/s':>8} {'ms/request':>11}")
-    for b in args.batches:
-        toks = jax.random.randint(jax.random.PRNGKey(b),
-                                  (b, args.prompt_len), 0, cfg.vocab)
-        cache = model.init_cache(b, max_seq)
-        # warmup compile
-        t, c = prefill(params, {"tokens": toks}, cache)
-        t, c = decode(params, t, jnp.asarray(args.prompt_len, jnp.int32), c)
-        jax.block_until_ready(t)
-
-        cache = model.init_cache(b, max_seq)
+          f"{args.requests} requests | prompt {args.prompt_len} | "
+          f"decode {args.decode_steps} | kv_quant {args.kv_quant}")
+    print(f"{'capacity':>9} {'wall_s':>7} {'req/s':>7} {'tok/s':>8} "
+          f"{'occupancy':>9} {'steps':>6}")
+    for cap in args.capacities:
+        engine = Engine(model, params,
+                        EngineConfig(capacity=cap, max_seq=max_seq,
+                                     kv_quant=args.kv_quant))
+        for p in prompts:
+            engine.add_request(p, args.decode_steps)
+        # warm the compile caches outside the timed region
+        engine.step()
+        s = engine.stats
+        warm_tokens = s.prefill_tokens + s.decode_tokens
+        warm_reqs = len(engine.finished)
         t0 = time.perf_counter()
-        tok, cache = prefill(params, {"tokens": toks}, cache)
-        jax.block_until_ready(tok)
-        t_prefill = time.perf_counter() - t0
-
-        t1 = time.perf_counter()
-        for i in range(args.decode_steps):
-            tok, cache = decode(params, tok,
-                                jnp.asarray(args.prompt_len + i, jnp.int32),
-                                cache)
-        jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t1
-
-        ms_tok = t_decode / args.decode_steps * 1e3
-        tput = b * args.decode_steps / t_decode
-        total = (t_prefill + t_decode) * 1e3
-        print(f"{b:6d} {t_prefill * 1e3:11.1f} {ms_tok:9.2f} "
-              f"{tput:8.1f} {total:11.1f}")
+        finished = engine.run()
+        wall = time.perf_counter() - t0
+        total = s.prefill_tokens + s.decode_tokens - warm_tokens
+        reqs = len(finished) - warm_reqs
+        occ = engine.scheduler.stats.mean_occupancy()
+        print(f"{cap:9d} {wall:7.2f} {reqs / wall:7.2f} "
+              f"{total / wall:8.1f} {occ:6.2f}/{cap:<2d} {s.steps:6d}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 repo check: docs link integrity + the tier-1 test suite
+# (ROADMAP.md's verify command). Usage: scripts/check.sh [pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== docs link check (DESIGN.md §N references) =="
+python scripts/check_docs_links.py
+
+echo "== tier-1 tests =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

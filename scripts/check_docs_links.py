@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""Docs link check: every ``DESIGN.md §N`` reference in the source tree
+must resolve to a ``## §N`` heading in DESIGN.md.
+
+Range references ("DESIGN.md §1–2", with an en-dash or hyphen) expand to
+every section in the range. Exits non-zero listing unresolved references.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+REF_RE = re.compile(r"DESIGN\.md\s*§(\d+)(?:\s*[–-]\s*(\d+))?")
+HEADING_RE = re.compile(r"^#{1,6}\s*§(\d+)\b", re.MULTILINE)
+
+
+def anchors() -> set[int]:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist")
+        sys.exit(1)
+    return {int(m.group(1))
+            for m in HEADING_RE.finditer(design.read_text())}
+
+
+def references() -> list[tuple[str, int, int]]:
+    """-> [(file:line, section, section), ...] with ranges expanded."""
+    refs = []
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                for m in REF_RE.finditer(line):
+                    lo = int(m.group(1))
+                    hi = int(m.group(2)) if m.group(2) else lo
+                    where = f"{path.relative_to(ROOT)}:{lineno}"
+                    for sec in range(lo, hi + 1):
+                        refs.append((where, sec, lo))
+    return refs
+
+
+def main() -> int:
+    have = anchors()
+    refs = references()
+    missing = [(where, sec) for where, sec, _ in refs if sec not in have]
+    print(f"DESIGN.md sections: {sorted(have)}; "
+          f"{len(refs)} section references in {len(SCAN_DIRS)} dirs")
+    if missing:
+        for where, sec in missing:
+            print(f"FAIL: {where} references DESIGN.md §{sec} "
+                  f"(no such heading)")
+        return 1
+    print("docs link check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

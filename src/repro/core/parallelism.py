@@ -28,7 +28,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.sharding.compat import shard_map
 
 from repro.core.window import conv2d_im2col
 

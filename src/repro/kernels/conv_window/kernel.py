@@ -108,20 +108,32 @@ def conv2d_window_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
         _conv_window_kernel, kh=kh, kw=kw, stride=stride,
         rb=rb, wo=wo, n=n, ho=ho)
 
+    # the slab: full width (line-buffer fidelity), halo rows via
+    # element-indexed offsets — consecutive row blocks overlap by
+    # kh - sh rows exactly like adjacent line-buffer windows. The same
+    # index map serves both pallas generations: for squeezed / full-extent
+    # dims the block index equals the element offset.
+    slab_map = lambda bi, ri, mi: (bi, 0, ri * rb * sh, 0)  # noqa: E731
+    if hasattr(pl, "Squeezed"):          # newer pallas: per-dim block types
+        slab_spec = pl.BlockSpec((pl.Squeezed(), n, pl.Element(rows_in), w),
+                                 slab_map)
+        out_spec = pl.BlockSpec((pl.Squeezed(), mb, rb, wo),
+                                lambda bi, ri, mi: (bi, mi, ri, 0))
+    else:                                # jax 0.4.x: Unblocked + None-squeeze
+        slab_spec = pl.BlockSpec((None, n, rows_in, w), slab_map,
+                                 indexing_mode=pl.Unblocked())
+        out_spec = pl.BlockSpec((None, mb, rb, wo),
+                                lambda bi, ri, mi: (bi, mi, ri, 0))
+
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            # the slab: full width (line-buffer fidelity), halo rows via
-            # element-indexed offsets — consecutive row blocks overlap by
-            # kh - sh rows exactly like adjacent line-buffer windows.
-            pl.BlockSpec((pl.Squeezed(), n, pl.Element(rows_in), w),
-                         lambda bi, ri, mi: (bi, 0, ri * rb * sh, 0)),
+            slab_spec,
             pl.BlockSpec((eta, mb), lambda bi, ri, mi: (0, mi)),
             pl.BlockSpec((1, mb), lambda bi, ri, mi: (0, mi)),
         ],
-        out_specs=pl.BlockSpec((pl.Squeezed(), mb, rb, wo),
-                               lambda bi, ri, mi: (bi, mi, ri, 0)),
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, m, ho, wo), x.dtype),
         interpret=interpret,
     )(x, wf, b)

@@ -1,6 +1,10 @@
-"""Production serving launcher: ``--arch <id>`` prefill + batched greedy
-decode with the KV/state cache, sharded over the mesh. ``--reduced`` runs a
-small same-family config on CPU.
+"""Production serving launcher: ``--arch <id>`` behind the
+continuous-batching engine (repro.serve.engine, DESIGN.md §6), sharded over
+the mesh. ``--reduced`` runs a small same-family config on CPU.
+
+A synthetic open-loop workload (``--requests`` with mixed prompt/decode
+lengths) is pushed through the engine; the report shows the occupancy the
+scheduler sustained and the resulting request/token throughput.
 """
 from __future__ import annotations
 
@@ -8,23 +12,27 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="KV slots (max in-flight sequences)")
+    ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="per-slot budget (default prompt+decode)")
+    ap.add_argument("--kv-quant", choices=("none", "int8"), default="none")
     ap.add_argument("--mesh", default="auto")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
 
     from repro.configs.registry import get_arch
     from repro.launch.train import build_mesh, reduced_config
-    from repro.serve.steps import make_decode_step, make_prefill_step
+    from repro.serve.engine import Engine, EngineConfig
     from repro.sharding.logical import DEFAULT_RULES, ShardingCtx
 
     spec = get_arch(args.arch)
@@ -38,32 +46,42 @@ def main() -> None:
     ctx = ShardingCtx(mesh, rules)
 
     params = model.init(jax.random.PRNGKey(0))
-    prefill = jax.jit(make_prefill_step(model, ctx))
-    decode = jax.jit(make_decode_step(model, ctx))
-    max_seq = args.prompt_len + args.decode_steps
+    max_seq = args.max_seq or (args.prompt_len + args.decode_steps)
+    engine = Engine(model, params,
+                    EngineConfig(capacity=args.capacity, max_seq=max_seq,
+                                 kv_quant=args.kv_quant),
+                    ctx)
 
-    toks = jax.random.randint(jax.random.PRNGKey(1),
-                              (args.batch, args.prompt_len), 0,
-                              model.cfg.vocab)
-    cache = model.init_cache(args.batch, max_seq)
+    # mixed-length synthetic workload: jittered prompts, fixed budget
+    rng = np.random.RandomState(1)
+    lens = rng.choice([args.prompt_len // 2, args.prompt_len],
+                      size=args.requests)
+    for plen in lens:
+        prompt = rng.randint(0, model.cfg.vocab, size=int(plen))
+        engine.add_request(prompt, args.decode_steps)
+
     t0 = time.perf_counter()
-    tok, cache = prefill(params, {"tokens": toks}, cache)
-    jax.block_until_ready(tok)
-    print(f"prefill {args.prompt_len} tokens × {args.batch}: "
-          f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
+    finished = engine.run()
+    wall = time.perf_counter() - t0
 
-    out = [np.asarray(tok)]
-    t1 = time.perf_counter()
-    for i in range(args.decode_steps):
-        tok, cache = decode(params, tok,
-                            jnp.asarray(args.prompt_len + i, jnp.int32),
-                            cache)
-        out.append(np.asarray(tok))
-    dt = time.perf_counter() - t1
-    print(f"decode {args.decode_steps} steps: {dt / args.decode_steps * 1e3:"
-          f".2f} ms/token, {args.batch * args.decode_steps / dt:.1f} tok/s")
-    print("sample continuation (request 0):",
-          [int(t[0]) for t in out[:10]])
+    s = engine.stats
+    total_tokens = s.prefill_tokens + s.decode_tokens
+    print(f"arch={args.arch} capacity={args.capacity} "
+          f"kv_quant={args.kv_quant} kv_bytes={engine.kv.nbytes():,}")
+    print(f"served {len(finished)} requests in {wall:.2f}s "
+          f"({len(finished) / wall:.2f} req/s)")
+    print(f"engine steps {s.steps} | mean occupancy "
+          f"{engine.scheduler.stats.mean_occupancy():.2f}/{args.capacity} "
+          f"| decode lane utilization {s.decode_utilization:.0%}")
+    print(f"tokens: {s.prefill_tokens} prefill + {s.decode_tokens} decode "
+          f"= {total_tokens} ({total_tokens / wall:.1f} tok/s)")
+    served = [r for r in finished if r.generated]
+    if served:
+        r0 = served[0]
+        print(f"sample continuation (request {r0.uid}):", r0.generated[:10])
+    rejected = len(finished) - len(served)
+    if rejected:
+        print(f"rejected {rejected} requests (prompt > max_seq {max_seq})")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,20 @@ from repro.sharding.logical import A
 __all__ = ["dense_init", "stacked_init", "rms_norm", "layer_norm",
            "rope_freqs", "apply_rope", "softcap", "ACTIVATIONS",
            "cross_entropy_loss", "chunked_cross_entropy",
-           "take_last_logits"]
+           "take_last_logits", "decode_q_pos"]
+
+
+def decode_q_pos(pos: jax.Array, batch: int) -> jax.Array:
+    """Query positions (B, 1) for a single-token decode step.
+
+    ``pos`` is either a scalar (whole batch at one position — the legacy
+    lock-step decode) or a (B,) vector of per-sequence positions (slot-based
+    continuous batching, DESIGN.md §6: every slot advances independently).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.broadcast_to(pos[None, None], (batch, 1))
+    return pos[:, None]
 
 
 def dense_init(key: jax.Array, shape: tuple[int, ...], fan_in: int,

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import (chunked_cross_entropy, cross_entropy_loss,
-                                 dense_init, rms_norm, stacked_init)
+                                 decode_q_pos, dense_init, rms_norm,
+                                 stacked_init)
 from repro.models.layers import (AttnConfig, MLPConfig, attention, attn_axes,
                                  attn_init, mlp_apply, mlp_axes, mlp_init)
 from repro.sharding.logical import A, ShardingCtx, shard
@@ -254,7 +255,7 @@ class EncDecLM:
                     ) -> tuple[jax.Array, dict]:
         cfg = self.cfg
         x = params["embedding"][tokens[:, None]].astype(cfg.dtype)
-        q_pos = jnp.broadcast_to(pos[None, None], x.shape[:2])
+        q_pos = decode_q_pos(pos, x.shape[0])
         x, new_self = self._decode_layers(
             params, x, None, ctx, q_pos=q_pos, self_cache=cache["self"],
             cross_kv=cache["cross"], cache_index=pos)

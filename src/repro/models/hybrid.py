@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import (chunked_cross_entropy, cross_entropy_loss,
-                                 dense_init, rms_norm, stacked_init)
+                                 decode_q_pos, dense_init, rms_norm,
+                                 stacked_init)
 from repro.models.layers import (AttnConfig, MLPConfig, attention, attn_axes,
                                  attn_init, mlp_apply, mlp_axes, mlp_init)
 from repro.models.mamba2 import (Mamba2Config, mamba2_apply, mamba2_axes,
@@ -302,7 +303,7 @@ class HybridLM:
                     ) -> tuple[jax.Array, dict]:
         cfg = self.cfg
         x = params["embedding"][tokens[:, None]].astype(cfg.dtype)
-        q_pos = jnp.broadcast_to(pos[None, None], x.shape[:2])
+        q_pos = decode_q_pos(pos, x.shape[0])
         x, new_states, new_attn = self._run(
             params, x, ctx, q_pos=q_pos, mamba_states=cache["mamba"],
             attn_cache=cache["attn"], cache_index=pos)

@@ -114,9 +114,11 @@ def attention(params: dict, x: jax.Array, cfg: AttnConfig,
               ) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
     """Returns (out (B,S,D), updated (k_cache, v_cache) or None).
 
-    cache_kv: (B, S_max, KV, hd) ×2. When given with ``cache_index`` (B?,()
-    scalar), the new K/V are written at that offset and attention runs over
-    the whole cache with position masking (decode / chunked prefill).
+    cache_kv: (B, S_max, KV, hd) ×2. When given with ``cache_index`` — a ()
+    scalar (all rows at one offset) or a (B,) vector (per-row offsets: the
+    serve engine's continuous-batching slots, DESIGN.md §6) — the new K/V
+    are written at that offset and attention runs over the whole cache with
+    position masking (decode / chunked prefill).
 
     ``window``: static sliding-window size; ``window_active``: optional
     traced bool (per-layer flag under scan — gemma2's local/global
@@ -163,10 +165,18 @@ def attention(params: dict, x: jax.Array, cfg: AttnConfig,
     if cache_kv is not None:
         ck, cv = cache_kv
         if cache_index is not None:
-            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
-                                                     cache_index, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
-                                                     cache_index, axis=1)
+            if getattr(cache_index, "ndim", 0) == 1:
+                # per-row write offsets: each slot advances independently
+                def _write(c, new, i):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        c, new, i, axis=0)
+                ck = jax.vmap(_write)(ck, k.astype(ck.dtype), cache_index)
+                cv = jax.vmap(_write)(cv, v.astype(cv.dtype), cache_index)
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    ck, k.astype(ck.dtype), cache_index, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cv, v.astype(cv.dtype), cache_index, axis=1)
         k, v = ck.astype(x.dtype), cv.astype(x.dtype)
         k = shard(k, ctx, "batch", "kv_seq", "act_kv", None)
         v = shard(v, ctx, "batch", "kv_seq", "act_kv", None)

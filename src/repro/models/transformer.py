@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.common import (chunked_cross_entropy, cross_entropy_loss,
-                                 dense_init, layer_norm, rms_norm, softcap,
-                                 stacked_init)
+                                 decode_q_pos, dense_init, layer_norm,
+                                 rms_norm, softcap, stacked_init)
 from repro.models.layers import (AttnConfig, MLPConfig, attention, attn_axes,
                                  attn_init, mlp_apply, mlp_axes, mlp_init)
 from repro.models.moe import MoEConfig, moe_apply, moe_axes, moe_init
@@ -338,10 +338,12 @@ class TransformerLM:
     def decode_step(self, params: dict, tokens: jax.Array, pos: jax.Array,
                     cache: dict, ctx: ShardingCtx | None = None
                     ) -> tuple[jax.Array, dict]:
-        """tokens (B,) int32, pos () int32 -> (logits (B,V), cache)."""
+        """tokens (B,) int32, pos () or per-slot (B,) int32 ->
+        (logits (B,V), cache)."""
         x = self._embed(params, tokens[:, None], ctx)
-        q_pos = jnp.broadcast_to(pos[None, None], x.shape[:2])
+        q_pos = decode_q_pos(pos, x.shape[0])
         x, _, cache = self._run_layers(params, x, ctx, q_pos=q_pos,
-                                       cache=cache, cache_index=pos)
+                                       cache=cache,
+                                       cache_index=jnp.asarray(pos, jnp.int32))
         logits = self._logits(params, x, ctx)
         return logits[:, 0, :], cache

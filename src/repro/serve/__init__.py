@@ -1,1 +1,13 @@
-from repro.serve.steps import make_decode_step, make_prefill_step
+"""Serving subsystem: step factories + the continuous-batching engine.
+
+See DESIGN.md §6 for the architecture (RequestQueue -> Scheduler ->
+SlotKVCache -> Engine) and benchmarks/serve_throughput.py for the
+occupancy-vs-throughput measurement.
+"""
+from repro.serve.cache import SlotKVCache
+from repro.serve.engine import Engine, EngineConfig, EngineStats
+from repro.serve.queue import RequestQueue
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Scheduler, SchedulerStats
+from repro.serve.steps import (greedy_sample, make_decode_step,
+                               make_prefill_step)

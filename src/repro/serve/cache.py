@@ -1,0 +1,176 @@
+"""Slot-based batched KV-cache manager (DESIGN.md §6).
+
+The cache is a fixed-capacity ring of sequence *slots*: one
+``model.init_cache(capacity, max_seq)`` pytree whose leaves carry the
+batch dim at axis 1 (the repo-wide cache layout, e.g. the transformer's
+(L, B, S, KV, hd) K/V), plus host-side per-slot position tracking. This is
+the paper's WINDOW_BUFFER idea at the serving layer: a fixed register file
+that new work is shifted into while the mask (per-slot ``kv_len``) hides
+stale contents, so slot reuse never needs a memset.
+
+Two storage modes:
+
+* ``quant="none"``  — leaves stay in the model dtype.
+* ``quant="int8"``  — float leaves are held as int8 codes + per-vector
+  fp32 scales (``core.quantize`` symmetric int8 over the trailing axis:
+  one scale per (layer, slot, position, head) vector for K/V). The engine
+  dequantizes *inside* its jitted step, so the resident cache is 8-bit —
+  4× the slots of a bf16 cache in the same memory. Requantization is
+  per-vector and therefore stable: rewriting one position never changes
+  another position's scale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import quantize_int8
+
+__all__ = ["SlotKVCache"]
+
+
+def _is_quantizable(leaf: jax.Array) -> bool:
+    return jnp.issubdtype(leaf.dtype, jnp.floating) and leaf.ndim >= 2
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_slot(big: Any, small: Any, slot: jax.Array) -> Any:
+    """Write a batch-1 cache pytree into batch slot ``slot`` of ``big``.
+
+    Every leaf pair is (…, C, extra…) vs (…, 1, extra…) with batch at
+    axis 1; sequence-bearing leaves may be shorter than max_seq in
+    ``small`` and land at sequence offset 0.
+    """
+
+    def write(b, s):
+        if b.ndim < 2:          # marker/scalar leaf: nothing slot-indexed
+            return b
+        start = (0, slot) + (0,) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), start)
+
+    return jax.tree_util.tree_map(write, big, small)
+
+
+@jax.jit
+def _quantize_leaves(cache: Any) -> tuple[Any, Any]:
+    """Split a float cache pytree into (int8 codes, fp32 scales) pytrees.
+
+    Non-float / low-rank leaves pass through unquantized (scale=None
+    marker replaced by a 1-element ones array to stay a valid pytree).
+    """
+
+    def q(leaf):
+        if _is_quantizable(leaf):
+            t = quantize_int8(leaf, axis=-1)
+            return t.codes, t.scale
+        # 0-d marker scale: ndim can never equal a real leaf's, which is
+        # how dequantize_leaves tells passthrough from quantized
+        return leaf, jnp.ones((), jnp.float32)
+
+    pairs = jax.tree_util.tree_map(q, cache)
+    codes = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                   is_leaf=lambda v: isinstance(v, tuple))
+    scales = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                    is_leaf=lambda v: isinstance(v, tuple))
+    return codes, scales
+
+
+def dequantize_leaves(codes: Any, scales: Any, dtype: Any) -> Any:
+    """Inverse of ``_quantize_leaves`` — called inside the engine's jit so
+    the dequantized cache is a transient of the step, not a resident."""
+
+    def dq(c, s):
+        # a real per-vector scale has the same rank as its codes; the 0-d
+        # marker does not — so a model's own int8 cache leaf (no scale)
+        # passes through untouched
+        if c.dtype == jnp.int8 and s.ndim == c.ndim:
+            return (c.astype(jnp.float32) * s).astype(dtype)
+        return c
+
+    return jax.tree_util.tree_map(dq, codes, scales)
+
+
+class SlotKVCache:
+    """Fixed ring of ``capacity`` sequence slots over a model cache pytree.
+
+    Host-side metadata: ``pos[slot]`` is the next write position (== number
+    of valid cache entries); device-side data is either ``self.data``
+    (native mode) or ``self.codes``/``self.scales`` (int8 mode).
+    """
+
+    def __init__(self, model, capacity: int, max_seq: int, *,
+                 quant: str = "none"):
+        if quant not in ("none", "int8"):
+            raise ValueError(f"unknown quant mode {quant!r}")
+        self.capacity = capacity
+        self.max_seq = max_seq
+        self.quant = quant
+        self.dtype = model.cfg.dtype
+        self.pos = np.zeros((capacity,), np.int32)
+        init = model.init_cache(capacity, max_seq)
+        if quant == "int8":
+            self.codes, self.scales = _quantize_leaves(init)
+            self.data = None
+        else:
+            self.data = init
+            self.codes = self.scales = None
+
+    # ---------- device views ----------
+    def device_state(self) -> tuple:
+        """The pytrees handed to the engine's jitted step (mode-dependent)."""
+        if self.quant == "int8":
+            return (self.codes, self.scales)
+        return (self.data,)
+
+    def set_device_state(self, *state) -> None:
+        if self.quant == "int8":
+            self.codes, self.scales = state
+        else:
+            (self.data,) = state
+
+    # ---------- slot operations ----------
+    def write_prefill(self, slot: int, prefill_cache: Any, length: int
+                      ) -> None:
+        """Scatter a batch-1 prefill cache into ``slot``; positions beyond
+        ``length`` keep whatever the previous tenant left (masked out)."""
+        if length > self.max_seq:
+            raise ValueError(f"prompt length {length} > max_seq "
+                             f"{self.max_seq}")
+        slot_ix = jnp.asarray(slot, jnp.int32)
+        if self.quant == "int8":
+            pc, ps = _quantize_leaves(prefill_cache)
+            self.codes = _scatter_slot(self.codes, pc, slot_ix)
+            self.scales = _scatter_slot(self.scales, ps, slot_ix)
+        else:
+            self.data = _scatter_slot(self.data, prefill_cache, slot_ix)
+        self.pos[slot] = length
+
+    def free(self, slot: int) -> None:
+        """Release a slot. Metadata-only — stale K/V stays resident and is
+        hidden by the kv_len mask until the next tenant overwrites it;
+        this is what makes slot reuse free (tested in test_serve_engine)."""
+        self.pos[slot] = 0
+
+    def advance(self, slot: int) -> None:
+        self.pos[slot] += 1
+
+    def remaining(self, slot: int) -> int:
+        return self.max_seq - int(self.pos[slot])
+
+    def positions(self) -> np.ndarray:
+        return self.pos.copy()
+
+    # ---------- accounting ----------
+    def nbytes(self) -> int:
+        """Resident cache bytes (the int8 win made measurable)."""
+        leaves = []
+        if self.quant == "int8":
+            leaves = (jax.tree_util.tree_leaves(self.codes)
+                      + jax.tree_util.tree_leaves(self.scales))
+        else:
+            leaves = jax.tree_util.tree_leaves(self.data)
+        return int(sum(l.size * l.dtype.itemsize for l in leaves))

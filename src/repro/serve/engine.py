@@ -1,0 +1,207 @@
+"""Continuous-batching serve engine (DESIGN.md §6).
+
+Composes the existing step factories (``make_prefill_step`` /
+``make_decode_step``) into a prefill-then-decode loop over a fixed ring of
+KV slots with in-flight batch refill:
+
+    while queue or running:
+        admit()    # prefill queued requests into free slots (batch-1 jit,
+                   #   scattered into the slot cache)
+        decode()   # ONE batched decode step over all capacity lanes with
+                   #   per-slot positions; finished slots freed and
+                   #   refillable on the very next iteration
+
+The decode step always runs at the full slot batch (inactive lanes carry
+token 0 at position 0 and are ignored host-side), so its compiled shape is
+fixed — one XLA program regardless of occupancy, exactly the paper's
+fixed-datapath argument: throughput scales with how full you keep the
+pipeline, not with recompiles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.cache import (SlotKVCache, _quantize_leaves,
+                               dequantize_leaves)
+from repro.serve.queue import RequestQueue
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Scheduler
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+__all__ = ["EngineConfig", "EngineStats", "Engine"]
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    capacity: int = 8                 # KV slots == max in-flight sequences
+    max_seq: int = 256                # per-slot sequence budget
+    kv_quant: str = "none"            # "none" | "int8"
+    eos_token: int | None = None
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    prefills: int = 0
+    prefill_tokens: int = 0
+    decode_tokens: int = 0            # tokens produced by active lanes
+    decode_lane_steps: int = 0        # capacity × decode steps (work issued)
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        total = self.prefill_tokens + self.decode_tokens
+        return total / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def decode_utilization(self) -> float:
+        """Fraction of issued decode lanes that produced a kept token."""
+        if self.decode_lane_steps == 0:
+            return 0.0
+        return self.decode_tokens / self.decode_lane_steps
+
+
+class Engine:
+    """Continuous-batching engine over one model + params.
+
+    The model must expose the repo cache protocol: ``init_cache(batch,
+    max_seq)`` (batch at leaf axis 1), ``prefill``, and a ``decode_step``
+    accepting per-row (B,) positions (transformer/hybrid/rwkv do).
+    """
+
+    def __init__(self, model, params: Any, config: EngineConfig = EngineConfig(),
+                 ctx=None):
+        self.model = model
+        self.params = params
+        self.config = config
+        self.queue = RequestQueue()
+        self.scheduler = Scheduler(config.capacity)
+        self.kv = SlotKVCache(model, config.capacity, config.max_seq,
+                              quant=config.kv_quant)
+        self.stats = EngineStats()
+        self.finished: list[Request] = []
+        self._uid = 0
+        self._last_token = np.zeros((config.capacity,), np.int32)
+
+        # one jit wrapper; XLA caches one executable per prompt length
+        # (workloads with few distinct lengths amortize to zero compiles)
+        self._prefill = jax.jit(make_prefill_step(model, ctx))
+        decode = make_decode_step(model, ctx)
+
+        if config.kv_quant == "int8":
+            dtype = model.cfg.dtype
+
+            def decode_int8(params, tokens, pos, codes, scales):
+                cache = dequantize_leaves(codes, scales, dtype)
+                tok, cache = decode(params, tokens, pos, cache)
+                codes, scales = _quantize_leaves(cache)
+                return tok, codes, scales
+
+            self._decode = jax.jit(decode_int8, donate_argnums=(3, 4))
+        else:
+            self._decode = jax.jit(decode, donate_argnums=(3,))
+
+    # ---------- request intake ----------
+    def add_request(self, prompt, max_new_tokens: int,
+                    eos_token: int | None = None) -> int:
+        uid = self._uid
+        self._uid += 1
+        req = Request(uid=uid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens,
+                      eos_token=(self.config.eos_token
+                                 if eos_token is None else eos_token))
+        req.enqueue_step = self.stats.steps
+        self.queue.add(req)
+        return uid
+
+    # ---------- phases ----------
+    def warm_prefill(self, length: int) -> None:
+        """Compile (and discard) the batch-1 prefill program for one
+        prompt length — lets benchmarks keep compiles out of timed
+        regions."""
+        cache0 = self.model.init_cache(1, length)
+        jax.block_until_ready(self._prefill(
+            self.params, {"tokens": jnp.zeros((1, length), jnp.int32)},
+            cache0)[0])
+
+    def _admit(self) -> None:
+        admitted = self.scheduler.admit(self.queue,
+                                        max_prompt_len=self.config.max_seq)
+        for req in self.scheduler.drain_rejected():
+            req.finish_step = self.stats.steps
+            self.finished.append(req)
+        for req in admitted:
+            req.admit_step = self.stats.steps
+            p = req.prompt_len
+            cache0 = self.model.init_cache(1, p)
+            tok, cache0 = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt[None, :])},
+                cache0)
+            self.kv.write_prefill(req.slot, cache0, p)
+            first = int(jax.device_get(tok)[0])
+            req.generated.append(first)
+            self._last_token[req.slot] = first
+            self.stats.prefills += 1
+            self.stats.prefill_tokens += p
+            self._maybe_finish(req.slot)
+
+    def _decode_all(self) -> None:
+        if self.scheduler.num_running == 0:
+            return
+        tokens = jnp.asarray(self._last_token)
+        pos = jnp.asarray(self.kv.positions())
+        out = self._decode(self.params, tokens, pos, *self.kv.device_state())
+        tok, state = out[0], out[1:]
+        self.kv.set_device_state(*state)
+        tok_host = np.asarray(jax.device_get(tok))
+        self.stats.decode_lane_steps += self.config.capacity
+        for slot, req in self.scheduler.running().items():
+            t = int(tok_host[slot])
+            req.generated.append(t)
+            self._last_token[slot] = t
+            self.kv.advance(slot)
+            self.stats.decode_tokens += 1
+            self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.scheduler.request_in(slot)
+        if req is None:
+            return
+        # slot budget: the next decode would write past max_seq — evict
+        if (not req.is_done() and self.kv.remaining(slot) <= 0):
+            req.truncated = True
+        if req.is_done():
+            req.finish_step = self.stats.steps
+            self.kv.free(slot)
+            self._last_token[slot] = 0
+            self.finished.append(self.scheduler.evict(slot))
+
+    # ---------- driving ----------
+    def step(self) -> int:
+        """One engine iteration: admit into free slots, then one batched
+        decode step. Returns the number of requests finished so far."""
+        t0 = time.perf_counter()
+        self._admit()
+        # occupancy of the decode about to run — recorded before the
+        # decode's own evictions so finished-this-step slots still count
+        self.scheduler.tick()
+        self._decode_all()
+        self.stats.steps += 1
+        self.stats.wall_s += time.perf_counter() - t0
+        return len(self.finished)
+
+    def run(self) -> list[Request]:
+        """Drain the queue completely; returns all finished requests in
+        finish order."""
+        while self.queue or self.scheduler.num_running:
+            self.step()
+        return self.finished
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.scheduler.num_running > 0

@@ -1,0 +1,43 @@
+"""FIFO admission queue for the serve engine (DESIGN.md §6).
+
+Deliberately minimal: arrival order is service order (head-of-line), which
+matches the paper's streaming-input model — the window pipeline consumes
+pixels in raster order; the engine consumes requests in arrival order.
+Priority policies belong in the ``Scheduler``, not here.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Iterable, Iterator
+
+from repro.serve.request import Request, RequestState
+
+__all__ = ["RequestQueue"]
+
+
+class RequestQueue:
+    def __init__(self, requests: Iterable[Request] = ()):
+        self._q: deque[Request] = deque()
+        for r in requests:
+            self.add(r)
+
+    def add(self, request: Request) -> None:
+        if request.state is not RequestState.QUEUED:
+            raise ValueError(f"request {request.uid} is {request.state}, "
+                             "only QUEUED requests can be enqueued")
+        self._q.append(request)
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+    def peek(self) -> Request | None:
+        return self._q[0] if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+    def __iter__(self) -> Iterator[Request]:
+        return iter(self._q)

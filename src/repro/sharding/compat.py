@@ -1,0 +1,30 @@
+"""Version-compatible ``shard_map`` import (DESIGN.md §4).
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace around jax 0.5; the installed toolchain may be on either
+side of that move. Every module that builds explicit-collective code
+(``core.parallelism``, ``models.moe``, ``train.compression``) imports the
+symbol from here so the repo runs on both.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:                                    # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        # the replication-check kwarg was renamed check_rep -> check_vma;
+        # translate so call sites can use the modern spelling everywhere.
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)
+
+__all__ = ["shard_map"]

@@ -1,0 +1,47 @@
+"""Optional-``hypothesis`` shim for the property-test modules.
+
+The container's clean interpreter may not ship ``hypothesis``; importing it
+at module level used to error-out collection of four whole test files,
+taking their plain unit tests down too. Importing ``given``/``settings``/
+``st`` from here instead keeps the unit tests collected everywhere and
+turns each property sweep into a skip when hypothesis is absent.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_strategies, **_kw):
+        def deco(fn):
+            # *args so pytest's signature introspection sees no fixture
+            # params; the skip fires before the body would need draws.
+            def skipped(*args, **kwargs):
+                pytest.skip("hypothesis not installed — property sweep "
+                            "skipped (unit tests still ran)")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Any ``st.<name>(...)`` call returns an inert placeholder."""
+
+        def __getattr__(self, name):
+            def make(*_a, **_kw):
+                return None
+            make.__name__ = name
+            return make
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

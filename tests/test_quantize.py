@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.quantize import (QFormat, dequantize_int8, fake_quant_int8,
                                  quantize_int8, quantize_tree)

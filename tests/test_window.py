@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.window import (LineBufferSim, conv2d_im2col, conv2d_ref,
                                conv_output_size, extract_windows,
