@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.ops import ExecPolicy
 
 BATCHES = [1, 2, 4, 8, 16, 32, 64, 128]
 
@@ -28,8 +29,9 @@ def run() -> None:
     key = jax.random.PRNGKey(0)
     flops1 = PaperCNNConfig().flops_per_image()
 
-    lat_model = PaperCNN(PaperCNNConfig(quant="int8", path="im2col"))
-    thr_model = PaperCNN(PaperCNNConfig(quant="none", path="im2col"))
+    lat_model = PaperCNN(PaperCNNConfig(
+        policy=ExecPolicy(backend="xla", quant="int8")))
+    thr_model = PaperCNN(PaperCNNConfig(policy=ExecPolicy(backend="xla")))
     params = lat_model.init(key)
 
     def thr_forward(p, x):

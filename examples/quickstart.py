@@ -1,10 +1,12 @@
 """Quickstart: the paper's accelerator pieces in 60 seconds.
 
   1. build the paper's CNN (Tab. I) on core.conv;
-  2. run the same weights through all three conv paths — paper-dataflow
-     oracle, MXU im2col form, and the Pallas window-stationary kernel
-     (interpret mode on CPU) — and check they agree;
-  3. quantize to Q8.8 (the paper's 16-bit fixed point) and int8, compare;
+  2. run the same weights through all three registered conv backends
+     (repro.ops) — ``ref`` paper-dataflow oracle, ``xla`` MXU im2col form,
+     ``pallas`` window-stationary kernel (interpret mode auto-detects on
+     CPU) — and check they agree;
+  3. quantize to Q8.8 (the paper's 16-bit fixed point) and int8 via
+     ``ExecPolicy(quant=...)``, compare;
   4. print the odd-even addition-tree resource table for the CNN's η.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -15,6 +17,7 @@ import numpy as np
 
 from repro.core.addtree import classic_tree_resources, tree_resources
 from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.ops import ExecPolicy, list_backends
 
 
 def main() -> None:
@@ -28,20 +31,20 @@ def main() -> None:
     model = PaperCNN(cfg)
     params = model.init(key)
     outs = {}
-    for path in ("im2col", "ref", "kernel"):
-        m = PaperCNN(PaperCNNConfig(path=path))
-        outs[path] = np.asarray(m.forward(params, x))
-        print(f"path={path:7s} logits[0,:3] = {outs[path][0, :3]}")
-    assert np.allclose(outs["ref"], outs["im2col"], atol=1e-4)
-    assert np.allclose(outs["kernel"], outs["im2col"], atol=1e-4)
-    print("all three conv paths agree ✓")
+    for backend in list_backends("conv2d"):
+        m = PaperCNN(PaperCNNConfig(policy=ExecPolicy(backend=backend)))
+        outs[backend] = np.asarray(m.forward(params, x))
+        print(f"backend={backend:7s} logits[0,:3] = {outs[backend][0, :3]}")
+    assert np.allclose(outs["ref"], outs["xla"], atol=1e-4)
+    assert np.allclose(outs["pallas"], outs["xla"], atol=1e-4)
+    print("all registered conv backends agree ✓")
 
     print("\n== quantization (paper C4) ==")
     for quant in ("qformat", "int8"):
-        m = PaperCNN(PaperCNNConfig(quant=quant))
+        m = PaperCNN(PaperCNNConfig(policy=ExecPolicy(quant=quant)))
         lq = np.asarray(m.forward(params, x))
-        drift = np.abs(lq - outs["im2col"]).max()
-        agree = (lq.argmax(-1) == outs["im2col"].argmax(-1)).mean()
+        drift = np.abs(lq - outs["xla"]).max()
+        agree = (lq.argmax(-1) == outs["xla"].argmax(-1)).mean()
         print(f"quant={quant:8s} max logit drift={drift:.4f} "
               f"argmax agreement={agree:.2f}")
 

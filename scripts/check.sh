@@ -7,5 +7,15 @@ cd "$(dirname "$0")/.."
 echo "== docs link check (DESIGN.md §N references) =="
 python scripts/check_docs_links.py
 
+echo "== dispatch grep-gate (no path=/interpret= plumbing outside ops) =="
+python scripts/check_dispatch.py
+
+# the full tier-1 run already collects the parity suite; run it as its own
+# step only when pytest args narrow the tier-1 selection below
+if [ "$#" -gt 0 ]; then
+  echo "== op-registry cross-backend parity suite =="
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q tests/test_ops_registry.py
+fi
+
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Dispatch grep-gate: string/bool execution-path plumbing is banned
+outside the ops layer.
+
+The op registry (repro.ops, DESIGN.md §7) is the single dispatch surface.
+This gate fails the build if the pre-registry idioms reappear in the
+product tree:
+
+  * ``path="ref" | "im2col" | "kernel"`` string dispatch, or
+  * hardcoded ``interpret=True/False`` literals
+
+anywhere in ``src/repro``, ``benchmarks`` or ``examples`` EXCEPT the
+sanctioned layers: ``src/repro/ops/`` (the registry itself),
+``src/repro/kernels/`` (the backend implementations the registry routes
+to), and ``src/repro/core/conv.py`` (the legacy-string deprecation shim).
+Tests are exempt — they pin the compat behavior on purpose.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src/repro", "benchmarks", "examples")
+ALLOWED_PREFIXES = ("src/repro/ops/", "src/repro/kernels/")
+ALLOWED_FILES = ("src/repro/core/conv.py",)
+
+PATTERNS = (
+    ("path-string dispatch",
+     re.compile(r"""path\s*=\s*["'](ref|im2col|kernel)["']""")),
+    ("hardcoded interpret literal",
+     re.compile(r"""interpret\s*=\s*(True|False)\b""")),
+)
+
+
+def main() -> int:
+    violations = []
+    scanned = 0
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            rel = path.relative_to(ROOT).as_posix()
+            if rel.startswith(ALLOWED_PREFIXES) or rel in ALLOWED_FILES:
+                continue
+            scanned += 1
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                for label, rx in PATTERNS:
+                    if rx.search(line):
+                        violations.append((rel, lineno, label, line.strip()))
+    print(f"dispatch gate: scanned {scanned} files in {SCAN_DIRS}")
+    if violations:
+        for rel, lineno, label, line in violations:
+            print(f"FAIL: {rel}:{lineno} [{label}] {line}")
+        print("route execution choices through repro.ops ExecPolicy "
+              "instead (DESIGN.md §7)")
+        return 1
+    print("dispatch gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

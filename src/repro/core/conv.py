@@ -1,34 +1,37 @@
 """Conv modules built on the paper's window pipeline (C1+C2+C3+C4 composed).
 
-``Conv2D``: the accelerator's conv layer. Three execution paths share one
-parameter layout (M, N, Kh, Kw):
+``Conv2D``: the accelerator's conv layer. Execution is delegated to the
+``repro.ops`` registry (DESIGN.md §7): ``Conv2DConfig.policy`` carries an
+``ExecPolicy`` (backend = ``ref`` paper-dataflow oracle | ``xla`` MXU-shaped
+im2col | ``pallas`` window-stationary kernel; quant = ``none`` | ``qformat``
+Q8.8 | ``int8``), and ``conv2d_apply`` is one registry call.
 
-  * ``path="ref"``     — paper-dataflow oracle (windows -> odd-even tree).
-  * ``path="im2col"``  — MXU-shaped jnp formulation (default on CPU).
-  * ``path="kernel"``  — the window-stationary Pallas TPU kernel
-                         (kernels/conv_window), interpret-mode on CPU.
-
-Quantization modes mirror the paper's Tab. III "16 bit fixed" row:
-  * ``quant="none"``   — float.
-  * ``quant="qformat"``— Q8.8 fixed-point simulation of weights+activations.
-  * ``quant="int8"``   — int8 symmetric per-channel weights, int8 activations,
-                         int32 accumulation (kernels/qmatmul path for dense
-                         layers; conv dequantizes per output channel).
+**Deprecation shim**: the legacy ``Conv2DConfig(path=..., quant=...)``
+string spelling still works — ``path`` maps through
+``repro.ops.compat.policy_from_legacy`` (``ref``→``ref``,
+``im2col``→``xla``, ``kernel``→``pallas``) with a DeprecationWarning. This
+file is the only sanctioned home of that mapping outside ``repro.ops``
+(enforced by scripts/check_dispatch.py).
 
 ``CausalConv1D``: the 1-D window pipeline used by Mamba2/RWKV token-shift
-(DESIGN.md §5). Its decode-time ``step`` keeps a (K-1)-deep ring state —
-literally the paper's WINDOW_BUFFER holding the last K-1 samples.
+(DESIGN.md §5) — ``causal_conv1d`` is re-exported from the op registry;
+its decode-time ``step`` keeps a (K-1)-deep ring state — literally the
+paper's WINDOW_BUFFER holding the last K-1 samples.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Literal
+from typing import TYPE_CHECKING, Literal
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import QFormat, quantize_int8
-from repro.core.window import conv2d_im2col, conv2d_ref, conv_output_size
+from repro.core.quantize import QFormat
+from repro.core.window import conv_output_size
+
+if TYPE_CHECKING:                     # repro.ops imports resolve lazily at
+    from repro.ops.policy import ExecPolicy  # call time: core is imported
+                                      # *by* the ops package (no cycle)
 
 __all__ = ["Conv2DConfig", "conv2d_init", "conv2d_apply",
            "causal_conv1d", "causal_conv1d_step"]
@@ -41,9 +44,32 @@ class Conv2DConfig:
     kernel: tuple[int, int] = (3, 3)
     stride: tuple[int, int] = (1, 1)
     use_bias: bool = True
-    path: Literal["ref", "im2col", "kernel"] = "im2col"
+    # legacy string spellings (deprecated — prefer ``policy``)
+    path: Literal["ref", "im2col", "kernel"] | None = None
     quant: Literal["none", "qformat", "int8"] = "none"
     qformat: QFormat = field(default_factory=QFormat)
+    policy: ExecPolicy | None = None
+
+    def exec_policy(self) -> "ExecPolicy | None":
+        """The effective ExecPolicy for this config.
+
+        Explicit ``policy`` wins (conflicting legacy fields raise); legacy
+        ``path``/``quant`` strings map through the compat shim. With neither
+        set, returns None — the op registry then resolves the ambient
+        ``use_policy(...)`` context, so a default-configured model follows
+        the surrounding policy block."""
+        legacy = self.path is not None or self.quant != "none"
+        if self.policy is not None:
+            if legacy:
+                raise ValueError(
+                    f"Conv2DConfig got policy={self.policy} AND legacy "
+                    f"path={self.path!r}/quant={self.quant!r}; set the "
+                    f"quant/backend on the ExecPolicy instead")
+            return self.policy
+        if not legacy:
+            return None               # defer to the ambient use_policy(...)
+        from repro.ops import policy_from_legacy
+        return policy_from_legacy(self.path, self.quant, self.qformat)
 
     def out_size(self, h: int, w: int) -> tuple[int, int]:
         return (conv_output_size(h, self.kernel[0], self.stride[0]),
@@ -63,58 +89,18 @@ def conv2d_init(key: jax.Array, cfg: Conv2DConfig, dtype=jnp.float32) -> dict:
 
 
 def conv2d_apply(params: dict, x: jax.Array, cfg: Conv2DConfig) -> jax.Array:
-    """x: (B, N, H, W) -> (B, M, Ho, Wo) under the configured path/quant."""
-    w = params["w"]
-    b = params.get("b")
-
-    if cfg.quant == "qformat":
-        # Paper-exact fixed point: weights, activations and (implicitly via
-        # the lattice) the products all live on the Qm.n grid; accumulation
-        # is exact because Q8.8*Q8.8 products fit fp32 integers.
-        q = cfg.qformat
-        x = q.quantize(x)
-        w = q.quantize(w)
-        b = None if b is None else q.quantize(b)
-    elif cfg.quant == "int8":
-        # int8 weights per output channel; activations per-tensor; float
-        # accumulate here (kernel path accumulates int32; see qmatmul).
-        wq = quantize_int8(w.reshape(cfg.out_channels, -1), axis=-1)
-        xq = quantize_int8(x, axis=None)
-        w = (wq.codes.astype(jnp.float32) * wq.scale).reshape(w.shape)
-        x = xq.codes.astype(jnp.float32) * xq.scale
-
-    if cfg.path == "ref":
-        out = conv2d_ref(x, w, b, cfg.stride)
-    elif cfg.path == "kernel":
-        from repro.kernels.conv_window.ops import conv2d_window  # lazy: pallas
-        out = conv2d_window(x, w, b, stride=cfg.stride)
-    else:
-        out = conv2d_im2col(x, w, b, cfg.stride)
-
-    if cfg.quant == "qformat":
-        out = cfg.qformat.quantize(out)
-    return out
+    """x: (B, N, H, W) -> (B, M, Ho, Wo) under the configured ExecPolicy."""
+    from repro.ops import conv2d
+    return conv2d(x, params["w"], params.get("b"), stride=cfg.stride,
+                  policy=cfg.exec_policy())
 
 
-def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None
-                  ) -> jax.Array:
-    """Depthwise causal 1-D conv — the 1-D window pipeline.
-
-    x: (B, T, C), w: (K, C) -> (B, T, C); y[t] = Σ_k w[k]·x[t-K+1+k] + b.
-    Left-padded so every output sees exactly K (zero-extended) samples,
-    matching Mamba's conv1d. Expressed as K shifted adds (the unrolled
-    window walk); XLA fuses this into a single pass.
-    """
-    k, c = w.shape
-    assert x.shape[-1] == c, (x.shape, w.shape)
-    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
-    t = x.shape[1]
-    out = jnp.zeros_like(x)
-    for i in range(k):  # K is tiny (2–4); static unroll
-        out = out + pad[:, i:i + t, :] * w[i]
-    if b is not None:
-        out = out + b
-    return out
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+                  policy: "ExecPolicy | None" = None) -> jax.Array:
+    """Compat re-export of ``repro.ops.causal_conv1d`` (the 1-D window
+    pipeline, DESIGN.md §5)."""
+    from repro.ops import causal_conv1d as op
+    return op(x, w, b, policy=policy)
 
 
 def causal_conv1d_step(x_t: jax.Array, state: jax.Array, w: jax.Array,

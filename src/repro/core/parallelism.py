@@ -31,9 +31,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.sharding.compat import shard_map
 
-from repro.core.window import conv2d_im2col
-
 __all__ = ["ChannelParallelism", "conv2d_channel_parallel"]
+
+
+def _conv(x, w, b, stride):
+    """Per-shard conv through the repro.ops registry (lazy import: core is
+    imported *by* the ops package). The active ExecPolicy picks the local
+    backend — auto lands on the XLA im2col form, the schedule's MXU shape."""
+    from repro.ops import conv2d
+    return conv2d(x, w, b, stride=stride)
 
 
 class ChannelParallelism(enum.Enum):
@@ -61,12 +67,12 @@ def conv2d_channel_parallel(
     batch_spec = data_axis if data_axis in mesh.axis_names else None
 
     if mode == ChannelParallelism.NONE:
-        return conv2d_im2col(x, w, b, stride)
+        return _conv(x, w, b, stride)
 
     if mode == ChannelParallelism.OUTPUT:
         # shard M on model; replicate x over model; concat along M implicit.
         def local(xl, wl, bl):
-            return conv2d_im2col(xl, wl, bl, stride)
+            return _conv(xl, wl, bl, stride)
 
         return shard_map(
             local, mesh=mesh,
@@ -80,7 +86,7 @@ def conv2d_channel_parallel(
         # shard N on model; each device computes partial O over its channel
         # slice; one psum combines (paper Fig. 3); bias added post-psum once.
         def local(xl, wl, bl):
-            part = conv2d_im2col(xl, wl, None, stride)
+            part = _conv(xl, wl, None, stride)
             part = jax.lax.psum(part, model_axis)
             return part + bl[None, :, None, None].astype(part.dtype)
 

@@ -5,6 +5,9 @@ qmatmul     — int8×int8→int32 blocked GEMM (paper C4: fixed-point datapath)
 addtree     — odd-even pairwise reduction (paper C2: the addition tree)
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-wrapper), ref.py (pure-jnp oracle). Validated in interpret mode on CPU;
-pass interpret=False on real TPUs.
+wrapper), ref.py (pure-jnp oracle). The wrappers are registered as the
+``pallas`` backends of the repro.ops registry (DESIGN.md §7); interpret
+mode auto-detects (kernel bodies interpreted everywhere but TPU), and
+block sizes resolve through ExecPolicy overrides > tuning cache >
+heuristics in repro.ops.tiling.
 """

@@ -35,7 +35,7 @@ def _addtree_kernel(x_ref, o_ref):
 
 
 def tree_reduce_sum_pallas(x: jax.Array, *, rb: int,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool) -> jax.Array:
     """(R, η) -> (R, 1). rb divides R."""
     r, eta = x.shape
     assert r % rb == 0, (r, rb)

@@ -86,7 +86,7 @@ def _conv_window_kernel(x_ref, w_ref, b_ref, o_ref, *,
 
 def conv2d_window_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
                          kh: int, kw: int, stride: tuple[int, int],
-                         rb: int, mb: int, interpret: bool = True
+                         rb: int, mb: int, interpret: bool
                          ) -> jax.Array:
     """Launch the kernel. x: (B, N, H, W); wf: (η, M) flat weights; b: (M,).
 

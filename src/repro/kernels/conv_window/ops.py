@@ -1,10 +1,15 @@
 """jit'd public wrapper for the window-stationary conv kernel.
 
-Chooses block sizes to fit a VMEM budget, flattens weights to the (η, M)
-layout (feature order N, Kh, Kw — matching core.window.extract_windows and
-the line-buffer stream order), pads the output-row count to the block size
-when ragged, and exposes a single ``conv2d_window`` entry point used by
-core.conv (path="kernel").
+Flattens weights to the (η, M) layout (feature order N, Kh, Kw — matching
+core.window.extract_windows and the line-buffer stream order), pads the
+output-row count to the block size when ragged, and exposes a single
+``conv2d_window`` entry point registered as the ``pallas`` backend of the
+``conv2d`` op family (repro.ops).
+
+Block sizes and interpret mode come from the shared policy/tiling layer
+(DESIGN.md §7): explicit kwargs > ``ExecPolicy.tiling`` overrides > the
+tuning cache > the VMEM-budget heuristic in ``repro.ops.tiling``; interpret
+defaults to auto-detection (interpret only off-TPU).
 """
 from __future__ import annotations
 
@@ -14,55 +19,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.conv_window.kernel import conv2d_window_pallas
-
-# VMEM working-set budget per grid step (v5e has 128 MiB VMEM per core;
-# stay well under to leave room for double buffering).
-_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+from repro.ops.policy import ExecPolicy, current_policy
+from repro.ops.tiling import choose_conv_blocks, largest_divisor, tile_params
 
 
-def _choose_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
-                   stride: tuple[int, int], itemsize: int
-                   ) -> tuple[int, int]:
-    """Pick (rb, mb): output rows per block and output channels per block.
-
-    Budget: slab n*rows_in*w + im2col η*rb*wo + weights η*mb + out mb*rb*wo.
-    Prefer mb = min(m, 128) (MXU lane width) then grow rb.
-    """
-    sh, sw = stride
-    ho = (h - kh) // sh + 1
-    wo = (w - kw) // sw + 1
-    eta = n * kh * kw
-    mb = m if m <= 128 else 128
-    while m % mb:
-        mb -= 1
-    best = 1
-    for rb in range(1, ho + 1):
-        rows_in = (rb - 1) * sh + kh
-        bytes_needed = (n * rows_in * w + eta * rb * wo
-                        + eta * mb + mb * rb * wo) * itemsize
-        if bytes_needed <= _VMEM_BUDGET_BYTES:
-            best = rb
-        else:
-            break
-    return best, mb
-
-
-@functools.partial(jax.jit, static_argnames=("stride", "interpret"))
-def conv2d_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
-                  *, stride: tuple[int, int] = (1, 1),
-                  interpret: bool = True) -> jax.Array:
-    """Window-stationary conv2d. x: (B,N,H,W), w: (M,N,Kh,Kw) -> (B,M,Ho,Wo).
-
-    VALID padding, like the paper's accelerator. ``interpret=True`` runs the
-    kernel body on CPU (this container); on TPU pass interpret=False.
-    """
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "interpret", "rb", "mb"))
+def _conv2d_window_jit(x: jax.Array, w: jax.Array, b: jax.Array | None, *,
+                       stride: tuple[int, int], interpret: bool,
+                       rb: int, mb: int) -> jax.Array:
     bsz, n, h, wdt = x.shape
     m, n2, kh, kw = w.shape
     assert n == n2, (x.shape, w.shape)
     sh, sw = stride
     ho = (h - kh) // sh + 1
 
-    rb, mb = _choose_blocks(n, h, wdt, m, kh, kw, stride, x.dtype.itemsize)
     # pad Ho to a multiple of rb by extending the input with dead rows —
     # the tail block computes windows over the pad and the result is sliced
     # off. (Rows, not a power-of-two pad: the odd-even rule again.)
@@ -71,9 +42,43 @@ def conv2d_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
         x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_rows * sh), (0, 0)))
 
     wf = w.reshape(m, n * kh * kw).T        # (η, M), feature order (N,Kh,Kw)
-    bias = jnp.zeros((1, m), x.dtype) if b is None else b.reshape(1, m).astype(x.dtype)
+    bias = jnp.zeros((1, m), x.dtype) if b is None \
+        else b.reshape(1, m).astype(x.dtype)
 
     out = conv2d_window_pallas(x, wf.astype(x.dtype), bias, kh=kh, kw=kw,
                                stride=stride, rb=rb, mb=mb,
                                interpret=interpret)
     return out[:, :, :ho, :]
+
+
+def conv2d_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                  *, stride: tuple[int, int] = (1, 1),
+                  interpret: bool | None = None,
+                  rb: int | None = None, mb: int | None = None,
+                  policy: ExecPolicy | None = None) -> jax.Array:
+    """Window-stationary conv2d. x: (B,N,H,W), w: (M,N,Kh,Kw) -> (B,M,Ho,Wo).
+
+    VALID padding, like the paper's accelerator. ``interpret=None``
+    auto-detects (kernel body interpreted everywhere but TPU); ``rb``/``mb``
+    override the resolved tile sizes.
+    """
+    pol = policy if policy is not None else current_policy()
+    if interpret is None:
+        interpret = pol.resolve_interpret()
+
+    n, h, wdt = x.shape[1], x.shape[2], x.shape[3]
+    m, kh, kw = w.shape[0], w.shape[2], w.shape[3]
+    defaults = choose_conv_blocks(n, h, wdt, m, kh, kw, tuple(stride),
+                                  x.dtype.itemsize)
+    sig = (n, h, wdt, m, kh, kw, *stride)
+    tiles = tile_params("conv2d", sig, x.dtype, defaults, pol.tile_overrides)
+    if rb is not None:
+        tiles["rb"] = rb
+    if mb is not None:
+        tiles["mb"] = mb
+    # mb must divide M (grid constraint); rb is free — ragged Ho is padded
+    tiles["mb"] = largest_divisor(m, tiles["mb"])
+    tiles["rb"] = max(1, tiles["rb"])
+    return _conv2d_window_jit(x, w, b, stride=tuple(stride),
+                              interpret=interpret,
+                              rb=tiles["rb"], mb=tiles["mb"])

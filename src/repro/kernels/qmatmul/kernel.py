@@ -47,7 +47,7 @@ def _qmatmul_kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
 def qmatmul_pallas(x_codes: jax.Array, w_codes: jax.Array,
                    x_scale: jax.Array, w_scale: jax.Array, *,
                    bm: int, bn: int, bk: int, out_dtype=jnp.float32,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool) -> jax.Array:
     m, k = x_codes.shape
     k2, n = w_codes.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0

@@ -8,9 +8,11 @@ Structure (MNIST 28×28×1, VALID padding, as in the paper):
   fc:    320 -> 10            params 3,210
 Total 14,180 params — matching the paper's Tab. I per-layer counts.
 
-The conv path is selectable: "im2col" (CPU jnp), "kernel" (the Pallas
-window-stationary kernel), "ref" (paper-dataflow oracle); quantization
-"none" | "qformat" (paper-exact Q8.8) | "int8".
+Execution is an ``ExecPolicy`` (repro.ops, DESIGN.md §7): backend
+``ref`` (paper-dataflow oracle) | ``xla`` (MXU im2col form) | ``pallas``
+(window-stationary kernel) | auto, and quantization ``none`` | ``qformat``
+(paper-exact Q8.8) | ``int8``. The legacy ``path=``/``quant=`` string
+fields still work via the core.conv deprecation shim.
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ import jax.numpy as jnp
 from repro.core.conv import Conv2DConfig, conv2d_apply, conv2d_init
 from repro.core.quantize import QFormat
 from repro.models.common import dense_init
+from repro.ops import ExecPolicy
 from repro.sharding.logical import A
 
 __all__ = ["PaperCNNConfig", "PaperCNN"]
@@ -38,22 +41,24 @@ class PaperCNNConfig:
     conv2_k: int = 6
     conv2_c: int = 20
     n_classes: int = 10
-    path: Literal["ref", "im2col", "kernel"] = "im2col"
+    # legacy string spellings (deprecated — prefer ``policy``)
+    path: Literal["ref", "im2col", "kernel"] | None = None
     quant: Literal["none", "qformat", "int8"] = "none"
+    policy: ExecPolicy | None = None
 
     @property
     def conv1_cfg(self) -> Conv2DConfig:
         return Conv2DConfig(self.in_channels, self.conv1_c,
                             (self.conv1_k, self.conv1_k), (1, 1),
                             path=self.path, quant=self.quant,
-                            qformat=QFormat())
+                            qformat=QFormat(), policy=self.policy)
 
     @property
     def conv2_cfg(self) -> Conv2DConfig:
         return Conv2DConfig(self.conv1_c, self.conv2_c,
                             (self.conv2_k, self.conv2_k), (1, 1),
                             path=self.path, quant=self.quant,
-                            qformat=QFormat())
+                            qformat=QFormat(), policy=self.policy)
 
     def feature_sizes(self) -> tuple[int, int, int]:
         """(post-pool1, post-pool2, flattened fc input)."""

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.models.common import (ACTIVATIONS, apply_rope, dense_init,
                                  rms_norm, rope_freqs, softcap)
+from repro.ops import dense as dense_op
 from repro.sharding.logical import A, ShardingCtx, shard
 
 __all__ = ["AttnConfig", "attn_init", "attn_axes", "attention",
@@ -309,17 +310,18 @@ def mlp_axes(cfg: MLPConfig) -> dict:
 
 def mlp_apply(params: dict, x: jax.Array, cfg: MLPConfig,
               ctx: ShardingCtx | None) -> jax.Array:
+    """Dense matmuls route through the repro.ops ``dense`` entry point, so
+    an active ``use_policy(ExecPolicy(quant="int8"))`` moves the MLP onto
+    the int8 datapath (kernels/qmatmul) without threading flags here."""
     act = ACTIVATIONS[cfg.act]
-    hid = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(x.dtype))
-    if cfg.use_bias:
-        hid = hid + params["bi"].astype(x.dtype)
+    hid = dense_op(x, params["wi"].astype(x.dtype),
+                   params["bi"].astype(x.dtype) if cfg.use_bias else None)
     if cfg.gated:
-        gate = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(x.dtype))
+        gate = dense_op(x, params["wg"].astype(x.dtype))
         hid = act(gate) * hid
     else:
         hid = act(hid)
     hid = shard(hid, ctx, "batch", "act_seq", "act_mlp")
-    out = jnp.einsum("bsf,fd->bsd", hid, params["wo"].astype(x.dtype))
-    if cfg.use_bias:
-        out = out + params["bo"].astype(x.dtype)
+    out = dense_op(hid, params["wo"].astype(x.dtype),
+                   params["bo"].astype(x.dtype) if cfg.use_bias else None)
     return shard(out, ctx, "batch", "act_seq", "act_embed")

@@ -1,6 +1,6 @@
 """Mamba2 (SSD) block — chunked state-space duality scan [arXiv:2405.21060].
 
-The block's causal conv1d is built on core.conv.causal_conv1d — the paper's
+The block's causal conv1d is the repro.ops ``causal_conv1d`` family — the paper's
 C3 window pipeline in one dimension (decode keeps a (K-1)-deep ring state,
 literally a WINDOW_BUFFER; DESIGN.md §5, zamba2 row).
 
@@ -17,7 +17,8 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.conv import causal_conv1d, causal_conv1d_step
+from repro.core.conv import causal_conv1d_step
+from repro.ops import causal_conv1d
 from repro.models.common import dense_init, rms_norm
 from repro.sharding.logical import A, ShardingCtx, shard
 

@@ -1,0 +1,37 @@
+"""Unified op registry + ExecPolicy — one dispatch API for every kernel
+backend (DESIGN.md §7).
+
+    from repro.ops import ExecPolicy, conv2d, use_policy
+
+    y = conv2d(x, w, b)                       # auto: xla on CPU, pallas on TPU
+    with use_policy(ExecPolicy(backend="pallas", quant="int8")):
+        y = conv2d(x, w, b)                   # every op in the block follows
+
+Layout:
+  policy    — ExecPolicy + use_policy/current_policy (contextvar)
+  registry  — OpRegistry: named backends, capability predicates,
+              platform-aware auto-selection
+  tiling    — shared block-size heuristics + the (op, shape, dtype)
+              tuning cache (populated by benchmarks/op_sweep.py)
+  impls     — backend registrations + public entry points
+  compat    — the legacy ``path=``/string shim (deprecated)
+"""
+from repro.ops.policy import (BACKENDS, QUANT_MODES, ExecPolicy,
+                              current_policy, default_interpret, use_policy)
+from repro.ops.tiling import TUNING_CACHE, TuningCache, tile_params
+from repro.ops.registry import (REGISTRY, BackendUnavailableError, OpRegistry,
+                                dispatch, list_backends, list_ops, register)
+from repro.ops.impls import (causal_conv1d, conv2d, dense, qdense, qmatmul,
+                             tree_reduce_sum)
+from repro.ops.compat import PATH_TO_BACKEND, policy_from_legacy
+
+__all__ = [
+    "BACKENDS", "QUANT_MODES", "ExecPolicy", "current_policy",
+    "default_interpret", "use_policy",
+    "TUNING_CACHE", "TuningCache", "tile_params",
+    "REGISTRY", "BackendUnavailableError", "OpRegistry", "dispatch",
+    "list_backends", "list_ops", "register",
+    "causal_conv1d", "conv2d", "dense", "qdense", "qmatmul",
+    "tree_reduce_sum",
+    "PATH_TO_BACKEND", "policy_from_legacy",
+]

@@ -1,0 +1,45 @@
+"""Deprecation shim: the old per-call-site strings -> ExecPolicy.
+
+Before the registry, execution structure was threaded as string literals:
+``Conv2DConfig(path="kernel", quant="int8")`` plus ``interpret=True``
+defaults inside each kernel wrapper. ``policy_from_legacy`` is the single
+place those spellings are still understood; everything else speaks
+``ExecPolicy``. New code must not add ``path=`` dispatch — the grep gate
+(``scripts/check_dispatch.py``) fails the build if it reappears outside
+this shim.
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.core.quantize import QFormat
+from repro.ops.policy import ExecPolicy
+
+__all__ = ["PATH_TO_BACKEND", "policy_from_legacy"]
+
+# the old Conv2D ``path`` spellings and the backends they meant
+PATH_TO_BACKEND = {"ref": "ref", "im2col": "xla", "kernel": "pallas"}
+
+
+def policy_from_legacy(path: str | None = None, quant: str | None = None,
+                       qformat: QFormat | None = None,
+                       interpret: bool | None = None) -> ExecPolicy:
+    """Map legacy ``path``/``quant`` strings to an ``ExecPolicy``.
+
+    ``path=None`` means "no preference" (registry auto-selects — which on
+    CPU lands on the old ``"im2col"`` default, on TPU on the kernel).
+    Raises on unknown spellings, warns ``DeprecationWarning`` when ``path``
+    is used at all.
+    """
+    backend = None
+    if path is not None:
+        if path not in PATH_TO_BACKEND:
+            raise ValueError(f"unknown conv path {path!r}; expected one of "
+                             f"{sorted(PATH_TO_BACKEND)}")
+        warnings.warn(
+            f"path={path!r} is deprecated; use "
+            f"ExecPolicy(backend={PATH_TO_BACKEND[path]!r})",
+            DeprecationWarning, stacklevel=3)
+        backend = PATH_TO_BACKEND[path]
+    return ExecPolicy(backend=backend, quant=quant or "none",
+                      qformat=qformat or QFormat(), interpret=interpret)

@@ -1,0 +1,252 @@
+"""Backend registrations + the public op entry points (DESIGN.md §7).
+
+Four op families, three backend flavors:
+
+  op               ref (oracle)          xla (jnp/lax)        pallas (kernel)
+  ---------------  --------------------  -------------------  ----------------
+  conv2d           paper-dataflow        im2col einsum        window-stationary
+                   (windows → odd-even   (MXU form)           kernel
+                   tree)                                      (kernels/conv_window)
+  tree_reduce_sum  odd-even pairwise     jnp.sum              addtree kernel
+  qmatmul          int32-exact dot       int32-exact dot      blocked int8 GEMM
+  causal_conv1d    stacked-window        shifted adds         —
+                   einsum
+
+Priorities make auto-selection match the platform: the Pallas kernels are
+strongly preferred on TPU and a last resort elsewhere (interpret mode is a
+correctness tool, not a fast path), so CPU auto-dispatch lands on the XLA
+formulations — exactly the old hardcoded defaults, now derived instead of
+scattered.
+
+Quantization (paper C4) is applied here, once, per ``ExecPolicy.quant``:
+``qformat`` snaps operands and results to the Qm.n lattice; ``int8`` is
+symmetric per-channel weight / per-tensor activation fake-quant for convs
+and the real int8 datapath (``qmatmul``/``qdense``) for dense layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor, quantize_int8
+from repro.core.window import conv2d_im2col, conv2d_ref
+from repro.core.addtree import pairwise_sum
+from repro.ops.policy import ExecPolicy, current_policy
+from repro.ops.registry import dispatch, register
+
+__all__ = ["conv2d", "tree_reduce_sum", "qmatmul", "qdense",
+           "causal_conv1d", "dense"]
+
+
+# ---------------------------------------------------------------- conv2d
+
+@register("conv2d", "ref", priority=1)
+def _conv2d_ref(x, w, b=None, *, stride=(1, 1), policy=None):
+    return conv2d_ref(x, w, b, stride)
+
+
+@register("conv2d", "xla", priority=10)
+def _conv2d_xla(x, w, b=None, *, stride=(1, 1), policy=None):
+    return conv2d_im2col(x, w, b, stride)
+
+
+def _conv2d_pallas_ok(x, w, b=None, *, stride=(1, 1), **_) -> bool:
+    return (x.ndim == 4 and w.ndim == 4 and x.shape[1] == w.shape[1]
+            and x.shape[2] >= w.shape[2] and x.shape[3] >= w.shape[3])
+
+
+@register("conv2d", "pallas", priority={"tpu": 30, "*": 5},
+          supports=_conv2d_pallas_ok)
+def _conv2d_pallas(x, w, b=None, *, stride=(1, 1), policy=None):
+    from repro.kernels.conv_window.ops import conv2d_window  # lazy: pallas
+    return conv2d_window(x, w, b, stride=stride, policy=policy)
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+           stride: tuple[int, int] = (1, 1),
+           policy: ExecPolicy | None = None) -> jax.Array:
+    """x: (B, N, H, W) · w: (M, N, Kh, Kw) -> (B, M, Ho, Wo), VALID padding.
+
+    Backend and quantization come from ``policy`` (or the active
+    ``use_policy`` context). This is the single conv entry point — the
+    per-call-site ``path=`` strings it replaces live only in the
+    ``core.conv`` deprecation shim.
+    """
+    pol = policy if policy is not None else current_policy()
+    if pol.quant == "qformat":
+        # Paper-exact fixed point: weights, activations and (implicitly via
+        # the lattice) the products all live on the Qm.n grid; accumulation
+        # is exact because Q8.8*Q8.8 products fit fp32 integers.
+        q = pol.qformat
+        x = q.quantize(x)
+        w = q.quantize(w)
+        b = None if b is None else q.quantize(b)
+    elif pol.quant == "int8":
+        # int8 weights per output channel; activations per-tensor; float
+        # accumulate here (dense layers use the real int8 kernel; conv
+        # dequantizes per output channel).
+        m = w.shape[0]
+        wq = quantize_int8(w.reshape(m, -1), axis=-1)
+        xq = quantize_int8(x, axis=None)
+        w = (wq.codes.astype(jnp.float32) * wq.scale).reshape(w.shape)
+        x = xq.codes.astype(jnp.float32) * xq.scale
+    out = dispatch("conv2d", x, w, b, stride=stride, policy=pol)
+    if pol.quant == "qformat":
+        out = pol.qformat.quantize(out)
+    return out
+
+
+# ------------------------------------------------------- tree_reduce_sum
+
+@register("tree_reduce_sum", "ref", priority=1)
+def _tree_ref(x, *, policy=None):
+    return pairwise_sum(x, axis=-1)
+
+
+@register("tree_reduce_sum", "xla", priority=10)
+def _tree_xla(x, *, policy=None):
+    return jnp.sum(x, axis=-1)
+
+
+@register("tree_reduce_sum", "pallas", priority={"tpu": 30, "*": 5},
+          supports=lambda x, **_: x.ndim == 2)
+def _tree_pallas(x, *, policy=None):
+    from repro.kernels.addtree.ops import tree_reduce_sum as tree_kernel
+    return tree_kernel(x, policy=policy)
+
+
+def tree_reduce_sum(x: jax.Array, *,
+                    policy: ExecPolicy | None = None) -> jax.Array:
+    """(R, η) -> (R,): odd-even pairwise tree sum along the last axis."""
+    return dispatch("tree_reduce_sum", x, policy=policy)
+
+
+# --------------------------------------------------------------- qmatmul
+
+def _int_dot(x_codes, w_codes, x_scale, w_scale, out_dtype):
+    acc = jax.lax.dot_general(
+        x_codes.astype(jnp.int32), w_codes.astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+@register("qmatmul", "ref", priority=1)
+def _qmatmul_ref(x_codes, w_codes, x_scale, w_scale, *,
+                 out_dtype=jnp.float32, policy=None):
+    from repro.kernels.qmatmul.ref import qmatmul_ref
+    return qmatmul_ref(x_codes, w_codes, x_scale, w_scale, out_dtype)
+
+
+@register("qmatmul", "xla", priority=10)
+def _qmatmul_xla(x_codes, w_codes, x_scale, w_scale, *,
+                 out_dtype=jnp.float32, policy=None):
+    # the XLA formulation is the int32-accumulating dot itself — what the
+    # MXU int8 path lowers to without explicit blocking
+    return _int_dot(x_codes, w_codes, x_scale, w_scale, out_dtype)
+
+
+@register("qmatmul", "pallas", priority={"tpu": 30, "*": 5},
+          supports=lambda xc, wc, xs, ws, **_: xc.ndim == 2 and wc.ndim == 2)
+def _qmatmul_pallas(x_codes, w_codes, x_scale, w_scale, *,
+                    out_dtype=jnp.float32, policy=None):
+    from repro.kernels.qmatmul.ops import qmatmul as qmatmul_kernel
+    return qmatmul_kernel(x_codes, w_codes, x_scale, w_scale,
+                          out_dtype=out_dtype, policy=policy)
+
+
+def qmatmul(x_codes: jax.Array, w_codes: jax.Array,
+            x_scale: jax.Array, w_scale: jax.Array, *,
+            out_dtype=jnp.float32,
+            policy: ExecPolicy | None = None) -> jax.Array:
+    """(M,K) int8 · (K,N) int8 -> (M,N). Scales: x (M,1)|scalar, w (1,N)|scalar."""
+    return dispatch("qmatmul", x_codes, w_codes, x_scale, w_scale,
+                    out_dtype=out_dtype, policy=policy)
+
+
+def qdense(x: jax.Array, wq: QTensor, out_dtype=None, *,
+           policy: ExecPolicy | None = None) -> jax.Array:
+    """fp (…, K) · int8 (K, N) -> fp (…, N): per-token activation quant,
+    per-output-channel weight scales — the deployment matmul for quantized
+    serving (paper Tab. III '16 bit fixed' row, int8 on TPU)."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    xq = quantize_int8(x2, axis=-1)             # per-row (per-token) scale
+    out = qmatmul(xq.codes, wq.codes, xq.scale, wq.scale,
+                  out_dtype=out_dtype, policy=policy)
+    return out.reshape(*lead, -1)
+
+
+# --------------------------------------------------------- causal_conv1d
+
+@register("causal_conv1d", "ref", priority=1)
+def _causal_conv1d_ref(x, w, b=None, *, policy=None):
+    """Oracle: materialize every K-deep window, one einsum (B,T,K,C)."""
+    k, c = w.shape
+    t = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    win = jnp.stack([pad[:, i:i + t, :] for i in range(k)], axis=2)
+    y = jnp.einsum("btkc,kc->btc", win, w)
+    return y if b is None else y + b
+
+
+@register("causal_conv1d", "xla", priority=10)
+def _causal_conv1d_xla(x, w, b=None, *, policy=None):
+    """K shifted adds (the unrolled window walk); XLA fuses to one pass."""
+    k, c = w.shape
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    t = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (2–4); static unroll
+        out = out + pad[:, i:i + t, :] * w[i]
+    return out if b is None else out + b
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+                  policy: ExecPolicy | None = None) -> jax.Array:
+    """Depthwise causal 1-D conv — the 1-D window pipeline (DESIGN.md §5).
+
+    x: (B, T, C), w: (K, C) -> (B, T, C); y[t] = Σ_k w[k]·x[t-K+1+k] + b.
+    Left-padded so every output sees exactly K (zero-extended) samples,
+    matching Mamba's conv1d.
+    """
+    assert x.shape[-1] == w.shape[-1], (x.shape, w.shape)
+    return dispatch("causal_conv1d", x, w, b, policy=policy)
+
+
+# ----------------------------------------------------------------- dense
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
+          policy: ExecPolicy | None = None) -> jax.Array:
+    """Policy-aware dense matmul: fp (…, K) · (K, N) -> (…, N).
+
+    Under ``quant="int8"`` the contraction runs on the real int8 datapath
+    (per-output-channel weight scales, per-token activation scales, int32
+    accumulation via the ``qmatmul`` family); ``"qformat"`` snaps operands
+    and result to the Qm.n lattice; ``"none"`` is a plain einsum. This is
+    how model layers (``models/layers.py`` MLPs) pick up quantized serving
+    from one ``use_policy`` block instead of threading flags.
+    """
+    pol = policy if policy is not None else current_policy()
+    if pol.quant == "int8":
+        if w.ndim != 2:
+            # never silently degrade a requested datapath (the registry's
+            # no-silent-fallback rule): batched/stacked weights have no
+            # int8 path here yet
+            raise ValueError(
+                f"dense under quant='int8' needs a 2-D weight, got "
+                f"{w.shape}; reshape or drop to quant='none'")
+        wq = quantize_int8(w, axis=0)           # (1, N) per-out-channel
+        out = qdense(x, wq, out_dtype=x.dtype, policy=pol)
+        return out if b is None else out + b
+    if pol.quant == "qformat":
+        # keep the whole affine op on the Qm.n lattice, bias included —
+        # same discipline as conv2d's qformat path
+        q = pol.qformat
+        out = q.quantize(jnp.einsum("...d,df->...f", q.quantize(x),
+                                    q.quantize(w)))
+        return out if b is None else q.quantize(out + q.quantize(b))
+    out = jnp.einsum("...d,df->...f", x, w)
+    return out if b is None else out + b

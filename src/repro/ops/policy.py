@@ -1,0 +1,108 @@
+"""ExecPolicy — the execution-policy layer of the op registry (DESIGN.md §7).
+
+The FPGA surveys (arXiv:1806.01683, arXiv:1712.08934) frame accelerator
+design as a *design-space mapping* problem: for each layer, pick an
+execution structure (which datapath, what tiling, what number format).
+``ExecPolicy`` is that mapping surface for this repo: one immutable value
+carrying
+
+  * ``backend``   — preferred registered backend (``"ref" | "xla" |
+                    "pallas"``) or ``None`` for auto-selection by the
+                    registry's platform-aware priorities;
+  * ``quant``     — numeric format (``"none" | "qformat" | "int8"``,
+                    paper C4) with its ``QFormat`` lattice;
+  * ``interpret`` — Pallas interpret mode. ``None`` auto-detects:
+                    interpret only off-TPU (``jax.default_backend()``);
+  * ``tiling``    — per-op tile-size overrides (e.g. ``{"rb": 8,
+                    "mb": 128}`` or namespaced ``{"conv2d.rb": 8}``),
+                    consulted before the tuning cache and heuristics.
+
+Policies nest via ``use_policy`` (a contextvar, so jit-trace-time dispatch
+and threaded engines both see the right one) and are hashable, so configs
+that embed one stay valid static jit arguments.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field, replace
+from typing import Literal, Mapping
+
+import jax
+
+from repro.core.quantize import QFormat
+
+__all__ = ["ExecPolicy", "use_policy", "current_policy", "default_interpret",
+           "BACKENDS", "QUANT_MODES"]
+
+BACKENDS = ("ref", "xla", "pallas")
+QUANT_MODES = ("none", "qformat", "int8")
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode auto-detection: interpret everywhere but TPU."""
+    return jax.default_backend() != "tpu"
+
+
+@dataclass(frozen=True)
+class ExecPolicy:
+    """How ops execute: backend preference, quantization, tiling."""
+
+    backend: str | None = None
+    quant: Literal["none", "qformat", "int8"] = "none"
+    qformat: QFormat = field(default_factory=QFormat)
+    interpret: bool | None = None
+    tiling: tuple[tuple[str, int], ...] = ()
+
+    def __post_init__(self):
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS} or None")
+        if self.quant not in QUANT_MODES:
+            raise ValueError(f"unknown quant mode {self.quant!r}; "
+                             f"expected one of {QUANT_MODES}")
+        if isinstance(self.tiling, Mapping):
+            object.__setattr__(self, "tiling",
+                               tuple(sorted(self.tiling.items())))
+        else:
+            object.__setattr__(self, "tiling", tuple(self.tiling))
+
+    def resolve_interpret(self) -> bool:
+        return default_interpret() if self.interpret is None else self.interpret
+
+    @property
+    def tile_overrides(self) -> dict[str, int]:
+        return dict(self.tiling)
+
+    def with_options(self, **overrides) -> "ExecPolicy":
+        return replace(self, **overrides)
+
+
+_ACTIVE: contextvars.ContextVar[ExecPolicy] = contextvars.ContextVar(
+    "repro_exec_policy", default=ExecPolicy())
+
+
+def current_policy() -> ExecPolicy:
+    """The innermost active policy (the default ExecPolicy() outside any
+    ``use_policy`` block)."""
+    return _ACTIVE.get()
+
+
+@contextlib.contextmanager
+def use_policy(policy: ExecPolicy | None = None, /, **overrides):
+    """Activate ``policy`` (or the current one with field ``overrides``)
+    for the dynamic extent of the block. Nests.
+
+    Dispatch reads the policy at **trace time**: a function jitted and
+    first called under policy A keeps A's backends/quant on later calls
+    even inside a ``use_policy(B)`` block (the policy is not part of jax's
+    compilation cache key). Activate the policy before the first call of a
+    jitted function, bake it in at closure-build time (as the serve step
+    factories do), or pass ``policy=`` explicitly per call."""
+    base = policy if policy is not None else current_policy()
+    resolved = replace(base, **overrides) if overrides else base
+    token = _ACTIVE.set(resolved)
+    try:
+        yield resolved
+    finally:
+        _ACTIVE.reset(token)

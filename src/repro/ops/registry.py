@@ -1,0 +1,148 @@
+"""The op registry: named backends per op family, capability-aware dispatch.
+
+Each op family (``conv2d``, ``tree_reduce_sum``, ``qmatmul``,
+``causal_conv1d``) registers named backend implementations with
+
+  * a **platform priority map** — ``{"tpu": 30, "*": 5}`` says "strongly
+    preferred on TPU, last resort elsewhere"; auto-selection ranks capable
+    backends by the priority resolved against ``jax.default_backend()``;
+  * an optional **capability predicate** ``supports(*args, **kwargs)`` —
+    shape/dtype constraints checked against the actual call.
+
+Dispatch resolves the active ``ExecPolicy`` (argument > context manager >
+default). An explicit ``policy.backend`` is a *cross-family preference*:
+
+  * family registers that backend, predicate accepts → it runs;
+  * family registers it but the predicate rejects this call → raises
+    ``BackendUnavailableError`` (never a silent shape-driven fallback — a
+    requested datapath that cannot run is a configuration bug, the FPGA
+    analogue of asking for more DSPs than the part has);
+  * family has never registered that backend (e.g. ``causal_conv1d`` has
+    no pallas kernel) → the preference does not apply and selection falls
+    back to platform-priority auto, so one model-wide policy works across
+    families with different backend rosters. Misspelled backends are
+    caught earlier, by ``ExecPolicy`` validation.
+
+``backend=None`` always auto-selects.
+
+Every registered impl is called as ``fn(*args, policy=<ExecPolicy>,
+**kwargs)`` so backends can read interpret mode and tiling overrides
+without per-call-site plumbing — the string/bool threading this registry
+replaces (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Mapping
+
+import jax
+
+from repro.ops.policy import ExecPolicy, current_policy
+
+__all__ = ["OpImpl", "OpRegistry", "BackendUnavailableError",
+           "REGISTRY", "register", "dispatch", "list_ops", "list_backends"]
+
+
+class BackendUnavailableError(ValueError):
+    """Requested backend is not registered, or rejects the call's args."""
+
+
+@dataclass(frozen=True)
+class OpImpl:
+    op: str
+    backend: str
+    fn: Callable
+    priority: Mapping[str, int] = field(default_factory=dict)
+    supports: Callable[..., bool] | None = None
+
+    def rank(self, platform: str) -> int:
+        return self.priority.get(platform, self.priority.get("*", 0))
+
+    def accepts(self, *args, **kwargs) -> bool:
+        if self.supports is None:
+            return True
+        return bool(self.supports(*args, **kwargs))
+
+
+class OpRegistry:
+    def __init__(self):
+        self._ops: dict[str, dict[str, OpImpl]] = {}
+
+    # ---------- registration ----------
+    def register(self, op: str, backend: str, *,
+                 priority: int | Mapping[str, int] = 0,
+                 supports: Callable[..., bool] | None = None) -> Callable:
+        """Decorator: register ``fn`` as ``backend`` for ``op``.
+
+        ``priority`` is either one number or a platform→priority map
+        (key ``"*"`` is the fallback platform).
+        """
+        prio = {"*": priority} if isinstance(priority, int) else dict(priority)
+
+        def deco(fn: Callable) -> Callable:
+            impls = self._ops.setdefault(op, {})
+            if backend in impls:
+                raise ValueError(f"{op}/{backend} registered twice")
+            impls[backend] = OpImpl(op=op, backend=backend, fn=fn,
+                                    priority=prio, supports=supports)
+            return fn
+
+        return deco
+
+    # ---------- introspection ----------
+    def ops(self) -> list[str]:
+        return sorted(self._ops)
+
+    def backends(self, op: str) -> list[str]:
+        """Backends for ``op``, highest current-platform priority first."""
+        impls = self._impls(op)
+        platform = jax.default_backend()
+        return sorted(impls, key=lambda b: (-impls[b].rank(platform), b))
+
+    def lookup(self, op: str, backend: str) -> OpImpl:
+        impls = self._impls(op)
+        if backend not in impls:
+            raise BackendUnavailableError(
+                f"op {op!r} has no backend {backend!r}; "
+                f"registered: {sorted(impls)}")
+        return impls[backend]
+
+    def supported_backends(self, op: str, *args, **kwargs) -> list[str]:
+        """Backends whose capability predicate accepts this call."""
+        return [b for b in self.backends(op)
+                if self._impls(op)[b].accepts(*args, **kwargs)]
+
+    def _impls(self, op: str) -> dict[str, OpImpl]:
+        if op not in self._ops:
+            raise KeyError(f"unknown op {op!r}; registered: {self.ops()}")
+        return self._ops[op]
+
+    # ---------- dispatch ----------
+    def dispatch(self, op: str, *args, policy: ExecPolicy | None = None,
+                 **kwargs):
+        pol = policy if policy is not None else current_policy()
+        if pol.backend is not None and pol.backend in self._impls(op):
+            impl = self._impls(op)[pol.backend]
+            if not impl.accepts(*args, **kwargs):
+                raise BackendUnavailableError(
+                    f"backend {pol.backend!r} does not support this "
+                    f"{op} call (shapes "
+                    f"{[getattr(a, 'shape', None) for a in args]}); "
+                    f"capable: {self.supported_backends(op, *args, **kwargs)}")
+            return impl.fn(*args, policy=pol, **kwargs)
+        # backend=None, or a cross-family preference this family never
+        # registered: platform-priority auto-selection
+        for backend in self.backends(op):
+            impl = self._impls(op)[backend]
+            if impl.accepts(*args, **kwargs):
+                return impl.fn(*args, policy=pol, **kwargs)
+        raise BackendUnavailableError(
+            f"no capable backend for op {op!r} "
+            f"(registered: {self.backends(op)})")
+
+
+REGISTRY = OpRegistry()
+register = REGISTRY.register
+dispatch = REGISTRY.dispatch
+list_ops = REGISTRY.ops
+list_backends = REGISTRY.backends

@@ -1,0 +1,169 @@
+"""Shared tile-size selection + the per-(op, shape, dtype) tuning cache.
+
+Every Pallas wrapper used to carry its own block chooser (``_choose_blocks``
+in conv_window, ``_pick_rb`` in addtree, ``_pick`` in qmatmul). They are
+folded here so one layer owns the heuristics, and a measured tuning cache
+can override them uniformly:
+
+    resolution order:  ExecPolicy.tiling overrides
+                     > TuningCache entry for (op, shape-sig, dtype)
+                     > analytic heuristic
+
+``benchmarks/op_sweep.py`` sweeps candidate tiles per op/shape and
+populates the cache (JSON on disk, ``REPRO_TUNING_CACHE`` env var or an
+explicit ``TUNING_CACHE.load(path)``). This is the software analogue of
+the FPGA design-space exploration step in the accelerator surveys
+(DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Mapping
+
+import numpy as np
+
+__all__ = ["largest_divisor", "padded_block", "choose_conv_blocks",
+           "choose_qmatmul_blocks", "choose_tree_rows",
+           "TuningCache", "TUNING_CACHE", "tile_params"]
+
+# VMEM working-set budget per grid step (v5e has 128 MiB VMEM per core;
+# stay well under to leave room for double buffering).
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def largest_divisor(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is <= cap (no power-of-two padding —
+    the paper's odd-even rule applied to blocking)."""
+    b = min(cap, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def padded_block(dim: int, cap: int) -> tuple[int, int]:
+    """(block, padded_dim): block = min(cap, dim), dim rounded up to a
+    multiple of block. For kernels that pad the ragged tail and slice —
+    avoids the divisor search degenerating to block=1 on primes."""
+    block = min(cap, dim)
+    padded = -(-dim // block) * block
+    return block, padded
+
+
+def choose_conv_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
+                       stride: tuple[int, int], itemsize: int
+                       ) -> dict[str, int]:
+    """Heuristic (rb, mb) for the window-stationary conv kernel.
+
+    Budget: slab n*rows_in*w + im2col η*rb*wo + weights η*mb + out mb*rb*wo.
+    Prefer mb = min(m, 128) (MXU lane width) then grow rb.
+    """
+    sh, sw = stride
+    ho = (h - kh) // sh + 1
+    wo = (w - kw) // sw + 1
+    eta = n * kh * kw
+    mb = largest_divisor(m, 128)
+    best = 1
+    for rb in range(1, ho + 1):
+        rows_in = (rb - 1) * sh + kh
+        bytes_needed = (n * rows_in * w + eta * rb * wo
+                        + eta * mb + mb * rb * wo) * itemsize
+        if bytes_needed <= VMEM_BUDGET_BYTES:
+            best = rb
+        else:
+            break
+    return {"rb": best, "mb": mb}
+
+
+def choose_qmatmul_blocks(m: int, n: int, k: int) -> dict[str, int]:
+    """int8 MXU-native tiling: sublane×lane = 32×128 for int8 on TPU;
+    largest divisors <= 128 per dim (blocks must divide — the int8 GEMM
+    does not pad)."""
+    return {"bm": largest_divisor(m, 128),
+            "bn": largest_divisor(n, 128),
+            "bk": largest_divisor(k, 128)}
+
+
+def choose_tree_rows(r: int, cap: int = 256) -> dict[str, int]:
+    """Row block for the addition-tree kernel. The wrapper pads R up to a
+    multiple of rb and slices, so rb never degenerates to 1 on prime R."""
+    return {"rb": min(cap, r)}
+
+
+def _dtype_name(dtype) -> str:
+    try:
+        return np.dtype(dtype).name
+    except TypeError:           # jax weak types / dtype-like objects
+        return str(dtype)
+
+
+class TuningCache:
+    """Measured tile parameters keyed by (op, shape signature, dtype)."""
+
+    def __init__(self):
+        self._entries: dict[tuple[str, tuple[int, ...], str],
+                            dict[str, int]] = {}
+
+    @staticmethod
+    def key(op: str, shape, dtype) -> tuple[str, tuple[int, ...], str]:
+        return (op, tuple(int(s) for s in shape), _dtype_name(dtype))
+
+    def get(self, op: str, shape, dtype) -> dict[str, int] | None:
+        return self._entries.get(self.key(op, shape, dtype))
+
+    def put(self, op: str, shape, dtype, params: Mapping[str, int]) -> None:
+        self._entries[self.key(op, shape, dtype)] = {
+            k: int(v) for k, v in dict(params).items()}
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ---------- persistence ----------
+    def save(self, path) -> None:
+        rows = [{"op": op, "shape": list(shape), "dtype": dt, "params": p}
+                for (op, shape, dt), p in sorted(self._entries.items())]
+        pathlib.Path(path).write_text(json.dumps(rows, indent=1) + "\n")
+
+    def load(self, path) -> int:
+        """Merge entries from ``path``; returns how many were loaded."""
+        rows = json.loads(pathlib.Path(path).read_text())
+        for row in rows:
+            self.put(row["op"], row["shape"], row["dtype"], row["params"])
+        return len(rows)
+
+
+TUNING_CACHE = TuningCache()
+
+
+def tile_params(op: str, shape, dtype, defaults: Mapping[str, int],
+                overrides: Mapping[str, int] | None = None) -> dict[str, int]:
+    """Resolve tile parameters for one op call.
+
+    ``defaults`` come from the analytic heuristic; a tuning-cache entry for
+    (op, shape, dtype) refines them; ``overrides`` (ExecPolicy.tiling) win
+    outright. Override keys may be namespaced ``"<op>.<key>"`` to target a
+    single op family; bare keys apply to any op that understands them.
+    Unknown keys are ignored so one policy can carry tiles for several ops.
+    """
+    merged = dict(defaults)
+    hit = TUNING_CACHE.get(op, shape, dtype)
+    if hit:
+        merged.update({k: v for k, v in hit.items() if k in defaults})
+    ov = dict(overrides or {})
+    for k, v in ov.items():             # bare keys first …
+        if "." not in k and k in defaults:
+            merged[k] = int(v)
+    for k, v in ov.items():             # … then namespaced ones win
+        name = k.split(".", 1)
+        if len(name) == 2 and name[0] == op and name[1] in defaults:
+            merged[name[1]] = int(v)
+    return merged
+
+
+_env_cache = os.environ.get("REPRO_TUNING_CACHE")
+if _env_cache and os.path.exists(_env_cache):
+    TUNING_CACHE.load(_env_cache)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ops import ExecPolicy
 from repro.serve.cache import (SlotKVCache, _quantize_leaves,
                                dequantize_leaves)
 from repro.serve.queue import RequestQueue
@@ -41,8 +42,19 @@ __all__ = ["EngineConfig", "EngineStats", "Engine"]
 class EngineConfig:
     capacity: int = 8                 # KV slots == max in-flight sequences
     max_seq: int = 256                # per-slot sequence budget
-    kv_quant: str = "none"            # "none" | "int8"
+    kv_quant: str | None = None       # "none" | "int8"; None → from policy
     eos_token: int | None = None
+    # compute policy activated around prefill/decode (repro.ops,
+    # DESIGN.md §7): backend preference, compute quant, tiling overrides
+    policy: ExecPolicy = field(default_factory=ExecPolicy)
+
+    @property
+    def cache_quant(self) -> str:
+        """KV-cache storage quant: explicit ``kv_quant`` wins; otherwise an
+        int8 compute policy also stores the cache in int8."""
+        if self.kv_quant is not None:
+            return self.kv_quant
+        return "int8" if self.policy.quant == "int8" else "none"
 
 
 @dataclass
@@ -83,7 +95,7 @@ class Engine:
         self.queue = RequestQueue()
         self.scheduler = Scheduler(config.capacity)
         self.kv = SlotKVCache(model, config.capacity, config.max_seq,
-                              quant=config.kv_quant)
+                              quant=config.cache_quant)
         self.stats = EngineStats()
         self.finished: list[Request] = []
         self._uid = 0
@@ -91,10 +103,11 @@ class Engine:
 
         # one jit wrapper; XLA caches one executable per prompt length
         # (workloads with few distinct lengths amortize to zero compiles)
-        self._prefill = jax.jit(make_prefill_step(model, ctx))
-        decode = make_decode_step(model, ctx)
+        self._prefill = jax.jit(make_prefill_step(model, ctx,
+                                                  policy=config.policy))
+        decode = make_decode_step(model, ctx, policy=config.policy)
 
-        if config.kv_quant == "int8":
+        if config.cache_quant == "int8":
             dtype = model.cfg.dtype
 
             def decode_int8(params, tokens, pos, codes, scales):

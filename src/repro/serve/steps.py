@@ -1,15 +1,21 @@
 """serve_step factories: prefill + single-token decode (+ greedy sampling).
 
 The decode step is the paper's operating point: batch-latency-first
-inference (Fig. 9's batch=1 advantage). Quantized-weight serving
-(core.quantize int8 + kernels/qmatmul) and the int8 KV cache plug in here.
+inference (Fig. 9's batch=1 advantage). Quantized-weight serving and the
+int8 KV cache plug in here: each factory accepts an ``ExecPolicy``
+(repro.ops, DESIGN.md §7) that is activated around the model call, so every
+registry-routed op inside the model (conv, dense/qmatmul, causal conv)
+follows it — no flag threading through model code.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.ops import ExecPolicy, use_policy
 
 __all__ = ["make_prefill_step", "make_decode_step", "greedy_sample"]
 
@@ -18,20 +24,29 @@ def greedy_sample(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
-def make_prefill_step(model, ctx=None) -> Callable:
+def _policy_scope(policy: ExecPolicy | None):
+    return use_policy(policy) if policy is not None \
+        else contextlib.nullcontext()
+
+
+def make_prefill_step(model, ctx=None,
+                      policy: ExecPolicy | None = None) -> Callable:
     def prefill_step(params, batch, cache):
-        logits, cache = model.prefill(params, batch, cache, ctx)
+        with _policy_scope(policy):
+            logits, cache = model.prefill(params, batch, cache, ctx)
         return greedy_sample(logits), cache
 
     return prefill_step
 
 
-def make_decode_step(model, ctx=None, sample: bool = True) -> Callable:
+def make_decode_step(model, ctx=None, sample: bool = True,
+                     policy: ExecPolicy | None = None) -> Callable:
     """decode_step(params, tokens (B,), pos (), cache) ->
     (next tokens (B,) | logits, cache)."""
 
     def decode_step(params, tokens, pos, cache):
-        logits, cache = model.decode_step(params, tokens, pos, cache, ctx)
+        with _policy_scope(policy):
+            logits, cache = model.decode_step(params, tokens, pos, cache, ctx)
         out = greedy_sample(logits) if sample else logits
         return out, cache
 

@@ -1,0 +1,369 @@
+"""Cross-backend parity suite for the repro.ops registry (DESIGN.md §7).
+
+Every registered backend of every op family must agree with the ``ref``
+oracle to tolerance — including ragged/odd/prime shapes (the odd-even
+rule's home turf) and all three quant modes. Plus unit coverage for
+ExecPolicy resolution, the legacy ``path=`` shim, tiling override
+precedence, and the tuning cache.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.conv import Conv2DConfig, conv2d_apply, conv2d_init
+from repro.core.quantize import QFormat
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.ops import (REGISTRY, BackendUnavailableError, ExecPolicy,
+                       TuningCache, causal_conv1d, conv2d, current_policy,
+                       default_interpret, dense, list_backends, list_ops,
+                       policy_from_legacy, qmatmul, tile_params,
+                       tree_reduce_sum, use_policy)
+from repro.ops.tiling import TUNING_CACHE
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _for_backends(op):
+    backends = list_backends(op)
+    assert "ref" in backends, f"{op} has no ref oracle"
+    return backends
+
+
+class TestRegistryContents:
+    def test_op_families_registered(self):
+        assert set(list_ops()) >= {"conv2d", "tree_reduce_sum", "qmatmul",
+                                   "causal_conv1d"}
+
+    def test_every_kernel_family_has_three_flavors(self):
+        for op in ("conv2d", "tree_reduce_sum", "qmatmul"):
+            assert set(list_backends(op)) == {"ref", "xla", "pallas"}, op
+
+    def test_auto_selection_off_tpu_prefers_xla(self):
+        if jax.default_backend() == "tpu":
+            pytest.skip("priority map differs on TPU")
+        for op in ("conv2d", "tree_reduce_sum", "qmatmul"):
+            assert list_backends(op)[0] == "xla"
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError):
+            ExecPolicy(backend="fpga")
+        x = jax.random.normal(KEY, (4, 9))
+        with pytest.raises(KeyError):
+            REGISTRY.dispatch("not_an_op", x)
+
+    def test_capability_predicate_rejects(self):
+        x3 = jax.random.normal(KEY, (2, 4, 9))   # 3-D: pallas tree is 2-D only
+        with pytest.raises(BackendUnavailableError):
+            REGISTRY.dispatch("tree_reduce_sum", x3,
+                              policy=ExecPolicy(backend="pallas"))
+        # auto-dispatch falls through to a capable backend instead
+        out = REGISTRY.dispatch("tree_reduce_sum", x3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x3.sum(-1)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_unregistered_backend_is_cross_family_preference(self):
+        """A model-wide backend="pallas" must not crash families that never
+        registered a pallas impl (causal_conv1d in Mamba2/RWKV models)."""
+        x = jax.random.normal(KEY, (2, 7, 4))
+        w = jax.random.normal(jax.random.PRNGKey(1), (3, 4))
+        want = np.asarray(causal_conv1d(x, w))
+        with use_policy(ExecPolicy(backend="pallas")):
+            got = np.asarray(causal_conv1d(x, w))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+class TestConv2dParity:
+    # ragged/odd shapes on purpose: prime dims, stride>1, non-square kernels
+    CASES = [
+        (1, 1, 28, 28, 15, 3, 3, 1, 1),    # paper conv1
+        (2, 15, 13, 13, 20, 6, 6, 1, 1),   # paper conv2
+        (2, 3, 11, 9, 5, 3, 3, 2, 2),      # prime H, stride 2
+        (1, 4, 10, 12, 7, 2, 5, 1, 2),     # non-square kernel
+        (1, 2, 7, 7, 3, 3, 3, 3, 3),       # ragged Ho (7-3)/3+1 = 2
+    ]
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_backends_agree(self, case):
+        b, n, h, w, m, kh, kw, sh, sw = case
+        x = jax.random.normal(jax.random.PRNGKey(sum(case)), (b, n, h, w))
+        wt = jax.random.normal(jax.random.PRNGKey(1), (m, n, kh, kw))
+        bias = jax.random.normal(jax.random.PRNGKey(2), (m,))
+        want = np.asarray(conv2d(x, wt, bias, stride=(sh, sw),
+                                 policy=ExecPolicy(backend="ref")))
+        for backend in _for_backends("conv2d"):
+            got = np.asarray(conv2d(x, wt, bias, stride=(sh, sw),
+                                    policy=ExecPolicy(backend=backend)))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"backend={backend}")
+
+    @pytest.mark.parametrize("quant", ["none", "qformat", "int8"])
+    def test_quant_modes_agree_across_backends(self, quant):
+        x = jax.random.normal(KEY, (2, 3, 9, 9))
+        wt = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 3, 3)) * 0.3
+        bias = jax.random.normal(jax.random.PRNGKey(2), (4,)) * 0.1
+        outs = {}
+        for backend in _for_backends("conv2d"):
+            pol = ExecPolicy(backend=backend, quant=quant, qformat=QFormat())
+            outs[backend] = np.asarray(conv2d(x, wt, bias, policy=pol))
+        for backend, got in outs.items():
+            np.testing.assert_allclose(
+                got, outs["ref"], rtol=1e-4, atol=1e-4,
+                err_msg=f"quant={quant} backend={backend}")
+
+    def test_quant_actually_quantizes(self):
+        x = jax.random.normal(KEY, (1, 2, 8, 8))
+        wt = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 3, 3))
+        q = QFormat()
+        out = conv2d(x, wt, policy=ExecPolicy(quant="qformat", qformat=q))
+        codes = np.asarray(out) / q.step
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+
+
+class TestTreeReduceParity:
+    # prime R (the old _pick_rb degenerated to rb=1 here), odd eta, eta=1
+    SHAPES = [(4, 9), (97, 37), (509, 7), (8, 1), (100, 144), (257, 256)]
+
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_backends_agree(self, shape):
+        x = jax.random.normal(jax.random.PRNGKey(shape[1]), shape)
+        want = np.asarray(x.sum(-1))
+        for backend in _for_backends("tree_reduce_sum"):
+            got = np.asarray(tree_reduce_sum(
+                x, policy=ExecPolicy(backend=backend)))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"backend={backend}")
+
+    def test_prime_rows_use_one_padded_block(self):
+        """The pad-and-slice fix: prime R must not fall back to rb=1."""
+        from repro.kernels.addtree.ops import _tree_reduce_sum_jit
+        from repro.ops.tiling import choose_tree_rows
+        assert choose_tree_rows(509)["rb"] == 256      # not 1
+        x = jax.random.normal(KEY, (509, 13))
+        out = _tree_reduce_sum_jit(x, rb=256, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x.sum(-1)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestQMatmulParity:
+    @pytest.mark.parametrize("mkn", [(8, 16, 8), (96, 144, 80), (4, 9, 6),
+                                     (37, 53, 29)])
+    def test_backends_agree(self, mkn):
+        m, k, n = mkn
+        xc = jax.random.randint(jax.random.PRNGKey(m), (m, k), -127, 128,
+                                jnp.int8)
+        wc = jax.random.randint(jax.random.PRNGKey(n), (k, n), -127, 128,
+                                jnp.int8)
+        xs = jax.random.uniform(jax.random.PRNGKey(2), (m, 1), jnp.float32,
+                                1e-3, 0.1)
+        ws = jax.random.uniform(jax.random.PRNGKey(3), (1, n), jnp.float32,
+                                1e-3, 0.1)
+        want = np.asarray(qmatmul(xc, wc, xs, ws,
+                                  policy=ExecPolicy(backend="ref")))
+        for backend in _for_backends("qmatmul"):
+            got = np.asarray(qmatmul(xc, wc, xs, ws,
+                                     policy=ExecPolicy(backend=backend)))
+            np.testing.assert_allclose(got, want, rtol=1e-6,
+                                       err_msg=f"backend={backend}")
+
+
+class TestCausalConv1dParity:
+    @pytest.mark.parametrize("btck", [(2, 7, 4, 3), (1, 1, 5, 4),
+                                      (3, 13, 2, 2)])
+    def test_backends_agree(self, btck):
+        b, t, c, k = btck
+        x = jax.random.normal(jax.random.PRNGKey(t), (b, t, c))
+        w = jax.random.normal(jax.random.PRNGKey(k), (k, c))
+        bias = jax.random.normal(jax.random.PRNGKey(1), (c,))
+        want = np.asarray(causal_conv1d(
+            x, w, bias, policy=ExecPolicy(backend="ref")))
+        for backend in _for_backends("causal_conv1d"):
+            got = np.asarray(causal_conv1d(
+                x, w, bias, policy=ExecPolicy(backend=backend)))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"backend={backend}")
+
+
+class TestExecPolicy:
+    def test_context_nesting(self):
+        assert current_policy() == ExecPolicy()
+        with use_policy(ExecPolicy(backend="ref")) as outer:
+            assert current_policy() is outer
+            with use_policy(quant="int8") as inner:
+                assert inner.backend == "ref"       # inherited
+                assert inner.quant == "int8"
+            assert current_policy() is outer
+        assert current_policy() == ExecPolicy()
+
+    def test_interpret_auto_detection(self):
+        assert ExecPolicy().resolve_interpret() == default_interpret()
+        assert default_interpret() == (jax.default_backend() != "tpu")
+        assert ExecPolicy(interpret=False).resolve_interpret() is False
+        assert ExecPolicy(interpret=True).resolve_interpret() is True
+
+    def test_policy_is_hashable(self):
+        p = ExecPolicy(backend="pallas", tiling={"rb": 4})
+        assert hash(p) == hash(ExecPolicy(backend="pallas",
+                                          tiling=(("rb", 4),)))
+
+    def test_dispatch_respects_context(self):
+        x3 = jax.random.normal(KEY, (2, 3, 5))
+        with use_policy(ExecPolicy(backend="pallas")):
+            with pytest.raises(BackendUnavailableError):
+                tree_reduce_sum(x3)     # pallas tree is 2-D only
+
+    def test_tiling_overrides_apply(self):
+        x = jax.random.normal(KEY, (10, 9))
+        want = np.asarray(x.sum(-1))
+        for tiling in ({"rb": 3}, {"tree_reduce_sum.rb": 3},
+                       {"conv2d.rb": 999, "rb": 3}):
+            pol = ExecPolicy(backend="pallas", tiling=tiling)
+            np.testing.assert_allclose(
+                np.asarray(tree_reduce_sum(x, policy=pol)), want,
+                rtol=1e-4, atol=1e-4)
+
+    def test_dense_quant_modes(self):
+        x = jax.random.normal(KEY, (4, 6, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+        ref = np.asarray(jnp.einsum("...d,df->...f", x, w))
+        plain = np.asarray(dense(x, w))
+        np.testing.assert_allclose(plain, ref, rtol=1e-6)
+        for quant in ("int8", "qformat"):
+            got = np.asarray(dense(x, w, policy=ExecPolicy(quant=quant)))
+            rel = np.abs(got - ref).max() / np.abs(ref).max()
+            assert rel < 0.05, (quant, rel)
+
+    def test_dense_qformat_biased_output_stays_on_lattice(self):
+        x = jax.random.normal(KEY, (4, 32))
+        w = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+        b = jax.random.normal(jax.random.PRNGKey(2), (16,))
+        q = QFormat()
+        out = np.asarray(dense(x, w, b, policy=ExecPolicy(quant="qformat",
+                                                          qformat=q)))
+        codes = out / q.step
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+
+    def test_dense_int8_rejects_non_2d_weight(self):
+        x = jax.random.normal(KEY, (4, 32))
+        w3 = jax.random.normal(KEY, (2, 32, 16))   # stacked expert weights
+        with pytest.raises(ValueError, match="2-D weight"):
+            dense(x, w3, policy=ExecPolicy(quant="int8"))
+
+
+class TestLegacyShim:
+    def test_path_strings_map_to_backends(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert policy_from_legacy("ref").backend == "ref"
+            assert policy_from_legacy("im2col").backend == "xla"
+            assert policy_from_legacy("kernel").backend == "pallas"
+        assert policy_from_legacy(None, "int8").backend is None
+
+    def test_path_warns_and_unknown_raises(self):
+        with pytest.warns(DeprecationWarning):
+            policy_from_legacy("kernel")
+        with pytest.raises(ValueError):
+            policy_from_legacy("vhdl")
+
+    def test_conv2d_config_old_and_new_spellings_agree(self):
+        x = jax.random.normal(KEY, (2, 2, 8, 8))
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = Conv2DConfig(2, 4, path="kernel", quant="qformat")
+            new = Conv2DConfig(2, 4, policy=ExecPolicy(backend="pallas",
+                                                       quant="qformat"))
+            params = conv2d_init(KEY, old)
+            np.testing.assert_allclose(
+                np.asarray(conv2d_apply(params, x, old)),
+                np.asarray(conv2d_apply(params, x, new)))
+
+    def test_paper_cnn_policy_spelling(self):
+        x = jax.random.normal(KEY, (2, 1, 28, 28))
+        m_auto = PaperCNN(PaperCNNConfig())
+        p = m_auto.init(KEY)
+        auto = np.asarray(m_auto.forward(p, x))
+        m_pol = PaperCNN(PaperCNNConfig(policy=ExecPolicy(backend="xla")))
+        np.testing.assert_allclose(np.asarray(m_pol.forward(p, x)), auto,
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_default_config_follows_ambient_policy(self):
+        """The README's flagship pattern: a default-configured model inside
+        use_policy(...) must actually follow the block's policy."""
+        x = jax.random.normal(KEY, (2, 2, 8, 8))
+        cfg = Conv2DConfig(2, 4)
+        params = conv2d_init(KEY, cfg)
+        plain = np.asarray(conv2d_apply(params, x, cfg))
+        with use_policy(ExecPolicy(quant="qformat")):
+            quantized = np.asarray(conv2d_apply(params, x, cfg))
+        assert np.abs(plain - quantized).max() > 0, \
+            "ambient qformat policy had no effect"
+        q = QFormat()
+        codes = quantized / q.step       # outputs land on the Q8.8 lattice
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+        # the whole default-configured CNN follows the block too
+        m = PaperCNN(PaperCNNConfig())
+        p = m.init(KEY)
+        imgs = jax.random.normal(KEY, (2, 1, 28, 28))
+        base = np.asarray(m.forward(p, imgs))
+        with use_policy(ExecPolicy(quant="qformat")):
+            assert np.abs(np.asarray(m.forward(p, imgs)) - base).max() > 0
+
+    def test_policy_plus_legacy_fields_conflict_raises(self):
+        cfg = Conv2DConfig(2, 4, quant="int8",
+                           policy=ExecPolicy(backend="xla"))
+        with pytest.raises(ValueError, match="legacy"):
+            cfg.exec_policy()
+
+
+class TestTuningCache:
+    def test_roundtrip(self, tmp_path):
+        cache = TuningCache()
+        cache.put("conv2d", (3, 11, 9, 5, 3, 3, 2, 2), jnp.float32,
+                  {"rb": 2, "mb": 5})
+        cache.put("qmatmul", (96, 144, 80), jnp.int8, {"bm": 32})
+        path = tmp_path / "tuning.json"
+        cache.save(path)
+        fresh = TuningCache()
+        assert fresh.load(path) == 2
+        assert fresh.get("conv2d", (3, 11, 9, 5, 3, 3, 2, 2),
+                         jnp.float32) == {"rb": 2, "mb": 5}
+        assert fresh.get("qmatmul", (96, 144, 80), jnp.int8) == {"bm": 32}
+        assert fresh.get("qmatmul", (1, 2, 3), jnp.int8) is None
+
+    def test_resolution_order(self):
+        sig = (123, 45)
+        TUNING_CACHE.put("tree_reduce_sum", sig, jnp.float32, {"rb": 41})
+        try:
+            # cache refines the heuristic default …
+            assert tile_params("tree_reduce_sum", sig, jnp.float32,
+                               {"rb": 123})["rb"] == 41
+            # … and policy overrides beat the cache; unknown keys ignored
+            got = tile_params("tree_reduce_sum", sig, jnp.float32,
+                              {"rb": 123}, {"rb": 7, "bogus": 1})
+            assert got == {"rb": 7}
+        finally:
+            TUNING_CACHE.clear()
+
+    def test_cached_tile_is_used_and_correct(self):
+        x = jax.random.normal(KEY, (23, 9))
+        TUNING_CACHE.put("tree_reduce_sum", (23, 9), jnp.float32, {"rb": 5})
+        try:
+            got = tree_reduce_sum(x, policy=ExecPolicy(backend="pallas"))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(x.sum(-1)),
+                                       rtol=1e-4, atol=1e-4)
+        finally:
+            TUNING_CACHE.clear()
+
+
+class TestServePolicyPlumbing:
+    def test_engine_config_cache_quant(self):
+        from repro.serve.engine import EngineConfig
+        assert EngineConfig().cache_quant == "none"
+        assert EngineConfig(kv_quant="int8").cache_quant == "int8"
+        assert EngineConfig(
+            policy=ExecPolicy(quant="int8")).cache_quant == "int8"
+        assert EngineConfig(kv_quant="none",
+                            policy=ExecPolicy(quant="int8")).cache_quant \
+            == "none"
