@@ -4,8 +4,10 @@ The paper's point: the latency-optimized accelerator wins at batch=1 and
 the throughput-optimized platform (GPU) catches up past batch ~64. We
 measure on CPU two configurations of the same CNN:
 
-  * ``latency path``  — int8-quantized weights, fused im2col conv (the
-    accelerator-like configuration),
+  * ``latency path``  — the int8 compiled ExecutionPlan (repro.graph,
+    DESIGN.md §8): fused conv blocks, weight scales constant-folded by
+    ``bind`` — the accelerator-like configuration, served exactly as the
+    vision engine serves it,
   * ``thruput path``  — plain fp32 XLA conv (lax.conv), which amortizes
     like the paper's GPU baseline,
 
@@ -31,8 +33,8 @@ def run() -> None:
 
     lat_model = PaperCNN(PaperCNNConfig(
         policy=ExecPolicy(backend="xla", quant="int8")))
-    thr_model = PaperCNN(PaperCNNConfig(policy=ExecPolicy(backend="xla")))
     params = lat_model.init(key)
+    lat_plan = lat_model.compile().bind(params)
 
     def thr_forward(p, x):
         # lax.conv-based reference path (throughput baseline)
@@ -51,12 +53,12 @@ def run() -> None:
                               (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
         return h.reshape(h.shape[0], -1) @ p["fc_w"] + p["fc_b"]
 
-    lat_fwd = jax.jit(lambda p, x: lat_model.forward(p, x))
+    lat_fwd = jax.jit(lambda x: lat_plan(x))
     thr_fwd = jax.jit(thr_forward)
 
     for b in BATCHES:
         x = jax.random.normal(key, (b, 1, 28, 28))
-        t_lat = time_fn(lat_fwd, params, x)
+        t_lat = time_fn(lat_fwd, x)
         t_thr = time_fn(thr_fwd, params, x)
         gops_lat = flops1 * b / t_lat / 1e3     # us -> GOPS
         gops_thr = flops1 * b / t_thr / 1e3

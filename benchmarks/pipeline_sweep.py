@@ -1,0 +1,150 @@
+"""Fused-plan vs layer-by-layer latency sweep (DESIGN.md §8).
+
+The paper's Tab. II argument, lifted between layers: the deep pipeline
+(conv → relu → pool with no intermediate feature-map round-trip) should be
+no slower than the layer-by-layer chain anywhere and pull ahead as batch
+(and therefore intermediate-tensor traffic) grows. We time, per quant mode
+and batch size:
+
+  * ``eager``  — ``PaperCNN.forward`` (conv2d_apply → relu → maxpool2 per
+    layer, each op materializing its output),
+  * ``plan``   — ``PaperCNN.compile()``'s fused ExecutionPlan, ``bind``-ed
+    so weight quantization is constant-folded out of the timed region,
+
+and report GOPS = flops_per_image × batch / time for both, plus the
+speedup. A ``BENCH_pipeline.json`` trajectory point (fused vs unfused
+GOPS at the reference batch) is appended so later PRs can track the
+fusion speedup over time.
+
+On CPU the Pallas fused kernel runs in interpret mode, so the registry
+auto-selects the XLA backends — the comparison is then compiled-plan
+structure vs eager op chain under the same backend, and the reproduced
+claim is the *shape* of the curve, not TPU microseconds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.ops import ExecPolicy, use_policy
+
+BATCHES = [1, 8, 32, 128]
+QUANTS = ("none", "qformat", "int8")
+REFERENCE_BATCH = 8                     # the trajectory-point batch
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_pipeline.json"
+
+
+def _best_us(fn, *args, warmup: int = 3, iters: int = 25) -> float:
+    """Minimum wall time in microseconds. The fused-vs-eager programs are
+    near-identical single-digit-ms CPU workloads, where the *floor* is the
+    meaningful latency estimate — the median is dominated by scheduler
+    noise at this scale (benchmarks/common.time_fn serves the larger
+    workloads)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def sweep(batches=BATCHES, quants=QUANTS, *, warmup=3, iters=25):
+    """-> rows [{quant, batch, eager_us, plan_us, gops_eager, gops_plan,
+    speedup}]."""
+    key = jax.random.PRNGKey(0)
+    flops1 = PaperCNNConfig().flops_per_image()
+    model = PaperCNN(PaperCNNConfig())
+    params = model.init(key)
+    rows = []
+    for quant in quants:
+        pol = ExecPolicy(quant=quant)
+        plan = model.compile(policy=pol)
+        bound = plan.bind(params)
+        plan_fwd = jax.jit(lambda x: bound(x))
+        eager_fwd = jax.jit(lambda p, x: model.forward(p, x))
+
+        for b in batches:
+            x = jax.random.normal(key, (b, 1, 28, 28))
+            with use_policy(pol):
+                t_eager = _best_us(eager_fwd, params, x,
+                                   warmup=warmup, iters=iters)
+            t_plan = _best_us(plan_fwd, x, warmup=warmup, iters=iters)
+            row = {
+                "quant": quant, "batch": b,
+                "eager_us": t_eager, "plan_us": t_plan,
+                "gops_eager": flops1 * b / t_eager / 1e3,
+                "gops_plan": flops1 * b / t_plan / 1e3,
+                "speedup": t_eager / t_plan,
+            }
+            rows.append(row)
+            emit(f"pipeline/{quant}/batch{b}/eager", t_eager,
+                 f"GOPS={row['gops_eager']:.2f}")
+            emit(f"pipeline/{quant}/batch{b}/plan", t_plan,
+                 f"GOPS={row['gops_plan']:.2f};"
+                 f"fused_speedup={row['speedup']:.2f}x;"
+                 f"fused_blocks={plan.num_fused()}")
+    return rows
+
+
+def trajectory_point(rows, path=BENCH_JSON) -> dict:
+    """Append the reference-batch fused/unfused GOPS to the trajectory
+    file (one JSON list; later PRs extend it)."""
+    ref = [r for r in rows if r["batch"] == REFERENCE_BATCH] or rows
+    point = {
+        "bench": "pipeline_sweep",
+        "reference_batch": ref[0]["batch"],
+        "platform": jax.default_backend(),
+        "modes": {r["quant"]: {"gops_unfused": round(r["gops_eager"], 3),
+                               "gops_fused": round(r["gops_plan"], 3),
+                               "fused_speedup": round(r["speedup"], 3)}
+                  for r in ref},
+    }
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(point)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return point
+
+
+def _summary(rows, wrote_json: bool) -> None:
+    worst = min((r["speedup"] for r in rows
+                 if r["batch"] >= REFERENCE_BATCH), default=1.0)
+    tail = f";trajectory={BENCH_JSON.name}" if wrote_json else ""
+    emit("pipeline/summary", 0.0,
+         f"min_speedup_at_batch>={REFERENCE_BATCH}={worst:.2f}x{tail}")
+
+
+def run() -> None:
+    rows = sweep()
+    trajectory_point(rows)
+    _summary(rows, wrote_json=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI: 2 batches, fewer iters")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_pipeline.json trajectory write")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        rows = sweep(batches=[1, 8], warmup=2, iters=8)
+    else:
+        rows = sweep()
+    if not args.no_json:
+        trajectory_point(rows)
+    _summary(rows, wrote_json=not args.no_json)

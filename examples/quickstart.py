@@ -7,7 +7,10 @@
      CPU) — and check they agree;
   3. quantize to Q8.8 (the paper's 16-bit fixed point) and int8 via
      ``ExecPolicy(quant=...)``, compare;
-  4. print the odd-even addition-tree resource table for the CNN's η.
+  4. compile the model into a fused, static ExecutionPlan with
+     ``PaperCNN.compile()`` (repro.graph, DESIGN.md §8) and check the
+     deep-pipelined plan matches the eager model exactly;
+  5. print the odd-even addition-tree resource table for the CNN's η.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -47,6 +50,20 @@ def main() -> None:
         agree = (lq.argmax(-1) == outs["xla"].argmax(-1)).mean()
         print(f"quant={quant:8s} max logit drift={drift:.4f} "
               f"argmax agreement={agree:.2f}")
+
+    print("\n== graph compiler: the deep pipeline (DESIGN.md §8) ==")
+    plan = model.compile()                 # trace -> fuse -> plan
+    print(f"compiled {len(plan.graph)} nodes, "
+          f"{plan.num_fused()} fused conv blocks:")
+    for line in plan.stages():
+        print(f"  {line}")
+    fused_logits = np.asarray(plan(params, x))
+    assert np.array_equal(fused_logits, np.asarray(model.forward(params, x)))
+    print("fused plan == eager forward (bitwise) ✓")
+    qplan = model.compile(policy=ExecPolicy(quant="int8")).bind(params)
+    print(f"int8 plan: weight scales constant-folded "
+          f"({len(qplan.folded)} foldings); logits[0,:3] = "
+          f"{np.asarray(qplan(x))[0, :3]}")
 
     print("\n== odd-even addition tree (paper C2) ==")
     for eta in (9, 15 * 36, 144, 256):   # conv1 η, conv2 η, paper examples

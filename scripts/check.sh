@@ -10,12 +10,15 @@ python scripts/check_docs_links.py
 echo "== dispatch grep-gate (no path=/interpret= plumbing outside ops) =="
 python scripts/check_dispatch.py
 
-# the full tier-1 run already collects the parity suite; run it as its own
-# step only when pytest args narrow the tier-1 selection below
+# the full tier-1 run already collects the parity + graph suites; run them
+# as their own step only when pytest args narrow the tier-1 selection below
 if [ "$#" -gt 0 ]; then
-  echo "== op-registry cross-backend parity suite =="
-  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q tests/test_ops_registry.py
+  echo "== op-registry cross-backend parity + graph-compiler suites =="
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q tests/test_ops_registry.py tests/test_graph.py
 fi
+
+echo "== pipeline_sweep smoke (fused plan vs layer-by-layer) =="
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.pipeline_sweep --smoke --no-json
 
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

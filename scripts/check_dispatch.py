@@ -1,10 +1,12 @@
 #!/usr/bin/env python
 """Dispatch grep-gate: string/bool execution-path plumbing is banned
-outside the ops layer.
+outside the ops layer, and hand-rolled conv→relu→pool chains are banned
+outside the graph/model/kernel layers.
 
-The op registry (repro.ops, DESIGN.md §7) is the single dispatch surface.
-This gate fails the build if the pre-registry idioms reappear in the
-product tree:
+The op registry (repro.ops, DESIGN.md §7) is the single dispatch surface
+and the graph compiler (repro.graph, DESIGN.md §8) is the single home of
+the conv-block pipeline. This gate fails the build if the pre-registry /
+pre-compiler idioms reappear in the product tree:
 
   * ``path="ref" | "im2col" | "kernel"`` string dispatch, or
   * hardcoded ``interpret=True/False`` literals
@@ -12,8 +14,17 @@ product tree:
 anywhere in ``src/repro``, ``benchmarks`` or ``examples`` EXCEPT the
 sanctioned layers: ``src/repro/ops/`` (the registry itself),
 ``src/repro/kernels/`` (the backend implementations the registry routes
-to), and ``src/repro/core/conv.py`` (the legacy-string deprecation shim).
-Tests are exempt — they pin the compat behavior on purpose.
+to), and ``src/repro/core/conv.py`` (the legacy-string deprecation shim);
+and
+
+  * a ``conv2d_apply(...)`` call followed within a few lines by ``relu``
+    and a pooling call (``maxpool2`` / ``reduce_window``) — the unfused
+    layer chain that ``fused_conv_block`` / ``PaperCNN.compile()``
+    replaces — anywhere EXCEPT ``src/repro/graph/`` (the compiler),
+    ``src/repro/models/`` (the traceable forward definitions) and
+    ``src/repro/kernels/`` (the fused backends themselves).
+
+Tests are exempt — they pin the compat/eager behavior on purpose.
 """
 from __future__ import annotations
 
@@ -33,6 +44,27 @@ PATTERNS = (
      re.compile(r"""interpret\s*=\s*(True|False)\b""")),
 )
 
+# hand-rolled conv-block pipeline: conv2d_apply then relu+pool nearby
+CHAIN_ALLOWED_PREFIXES = ("src/repro/graph/", "src/repro/models/",
+                          "src/repro/kernels/")
+CHAIN_WINDOW = 4                      # lines after the conv call to scan
+CONV_RE = re.compile(r"\bconv2d_apply\s*\(")
+RELU_RE = re.compile(r"\brelu\s*\(")
+POOL_RE = re.compile(r"\b(maxpool2|reduce_window)\s*\(")
+
+
+def _chain_violations(rel: str, lines: list[str]) -> list[tuple]:
+    out = []
+    for i, line in enumerate(lines):
+        if not CONV_RE.search(line):
+            continue
+        window = lines[i:i + 1 + CHAIN_WINDOW]
+        if any(RELU_RE.search(l) for l in window) and \
+                any(POOL_RE.search(l) for l in window):
+            out.append((rel, i + 1, "hand-rolled conv→relu→pool chain",
+                        line.strip()))
+    return out
+
 
 def main() -> int:
     violations = []
@@ -40,11 +72,13 @@ def main() -> int:
     for d in SCAN_DIRS:
         for path in sorted((ROOT / d).rglob("*.py")):
             rel = path.relative_to(ROOT).as_posix()
+            lines = path.read_text().splitlines()
+            if not rel.startswith(CHAIN_ALLOWED_PREFIXES):
+                violations.extend(_chain_violations(rel, lines))
             if rel.startswith(ALLOWED_PREFIXES) or rel in ALLOWED_FILES:
                 continue
             scanned += 1
-            for lineno, line in enumerate(
-                    path.read_text().splitlines(), start=1):
+            for lineno, line in enumerate(lines, start=1):
                 for label, rx in PATTERNS:
                     if rx.search(line):
                         violations.append((rel, lineno, label, line.strip()))
@@ -53,7 +87,8 @@ def main() -> int:
         for rel, lineno, label, line in violations:
             print(f"FAIL: {rel}:{lineno} [{label}] {line}")
         print("route execution choices through repro.ops ExecPolicy "
-              "instead (DESIGN.md §7)")
+              "(DESIGN.md §7) and conv pipelines through "
+              "repro.graph / fused_conv_block (DESIGN.md §8)")
         return 1
     print("dispatch gate OK")
     return 0

@@ -89,7 +89,15 @@ def conv2d_init(key: jax.Array, cfg: Conv2DConfig, dtype=jnp.float32) -> dict:
 
 
 def conv2d_apply(params: dict, x: jax.Array, cfg: Conv2DConfig) -> jax.Array:
-    """x: (B, N, H, W) -> (B, M, Ho, Wo) under the configured ExecPolicy."""
+    """x: (B, N, H, W) -> (B, M, Ho, Wo) under the configured ExecPolicy.
+
+    Duck-typed graph hook: when ``x`` is a ``TracedArray``
+    (repro.graph.trace) this records a Conv2D node in the graph under
+    construction instead of computing — how any core.conv-based model
+    becomes liftable into the repro.graph IR (DESIGN.md §8)."""
+    hook = getattr(x, "graph_conv2d", None)
+    if hook is not None:
+        return hook(params, cfg)
     from repro.ops import conv2d
     return conv2d(x, params["w"], params.get("b"), stride=cfg.stride,
                   policy=cfg.exec_policy())

@@ -36,12 +36,14 @@ from repro.core.addtree import pairwise_sum
 
 __all__ = [
     "conv_output_size",
+    "pool_output_size",
     "fill_latency",
     "reuse_ratio",
     "LineBufferSim",
     "extract_windows",
     "conv2d_ref",
     "conv2d_im2col",
+    "maxpool2",
 ]
 
 
@@ -51,6 +53,47 @@ def conv_output_size(in_size: int, k: int, stride: int) -> int:
     if in_size < k:
         raise ValueError(f"input {in_size} smaller than kernel {k}")
     return (in_size - k) // stride + 1
+
+
+def pool_output_size(in_size: int, odd: str = "raise") -> int:
+    """Output size of a 2×2/stride-2 VALID pool (paper Eq. 1–2 with K=S=2).
+
+    Eq. (1)/(2) give floor((H-2)/2)+1 = floor(H/2): an odd trailing
+    row/column contributes no window and is *dropped*. That silent drop is
+    made explicit here: ``odd`` is ``"raise"`` (default — odd inputs are a
+    sizing bug), ``"drop"`` (the Eq. 1–2 floor), or ``"pad"`` (extend with
+    -inf to the next even size, i.e. ceil(H/2))."""
+    if odd not in ("raise", "drop", "pad"):
+        raise ValueError(f"odd mode {odd!r}; expected raise|drop|pad")
+    if in_size % 2 and odd == "raise":
+        raise ValueError(
+            f"2x2/2 maxpool over an odd size {in_size} drops the last "
+            f"row/column (paper Eq. 1-2 floor); pass odd='drop' to accept "
+            f"that or odd='pad' to keep a ceil-sized output")
+    if in_size % 2 and odd == "pad":
+        return (in_size + 1) // 2
+    return in_size // 2
+
+
+def maxpool2(x: jax.Array, *, odd: str = "raise") -> jax.Array:
+    """2×2 max pool, stride 2, NCHW — the paper's pooling layers.
+
+    Odd feature-map sizes are handled per ``odd`` (see
+    ``pool_output_size``): the old behavior silently dropped the last
+    row/column; now that is an explicit choice. Duck-typed graph hook:
+    a ``TracedArray`` (repro.graph.trace) records a MaxPool2 node instead
+    of computing."""
+    hook = getattr(x, "graph_maxpool2", None)
+    if hook is not None:
+        return hook(odd=odd)
+    h, w = x.shape[-2], x.shape[-1]
+    # validate (and raise) before any padding
+    pool_output_size(h, odd), pool_output_size(w, odd)
+    if odd == "pad" and (h % 2 or w % 2):
+        pad = [(0, 0)] * (x.ndim - 2) + [(0, h % 2), (0, w % 2)]
+        x = jnp.pad(x, pad, constant_values=-jnp.inf)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
 
 
 def fill_latency(k: int, w: int) -> int:

@@ -1,0 +1,37 @@
+"""repro.graph — the fusion graph compiler (DESIGN.md §8).
+
+Models are *traced* into a typed, static-shape op-graph IR, *rewritten*
+by a small pass pipeline (conv+bias+relu+pool fusion, quantization
+lowering with weight-scale constant folding, dead-quantize elimination),
+and *executed* as a static ``ExecutionPlan`` whose stages dispatch
+through the repro.ops registry — the third pillar (dispatch → graph →
+serving) of the production architecture:
+
+    from repro.models.cnn import PaperCNN, PaperCNNConfig
+    plan = PaperCNN(PaperCNNConfig()).compile()
+    logits = plan(params, images)            # == eager forward, fused
+
+Layout:
+  ir      — TensorSpec/ParamRef + the node types + Graph
+  trace   — TracedArray tracer over the hooked functional layer
+  passes  — fuse_conv_blocks / lower_quant / eliminate_dead_quantize
+  plan    — ExecutionPlan / BoundPlan / compile_model
+"""
+from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
+                            FusedConvBlockNode, Graph, InputNode,
+                            MaxPool2Node, Node, ParamRef, QuantizeNode,
+                            ReluNode, TensorSpec)
+from repro.graph.trace import GraphBuilder, TracedArray, param_refs, trace
+from repro.graph.passes import (default_passes, eliminate_dead_quantize,
+                                fuse_conv_blocks, lower_quant)
+from repro.graph.plan import BoundPlan, ExecutionPlan, compile_model
+
+__all__ = [
+    "TensorSpec", "ParamRef", "Node", "InputNode", "Conv2DNode", "ReluNode",
+    "MaxPool2Node", "FlattenNode", "DenseNode", "QuantizeNode",
+    "FusedConvBlockNode", "Graph",
+    "GraphBuilder", "TracedArray", "param_refs", "trace",
+    "default_passes", "eliminate_dead_quantize", "fuse_conv_blocks",
+    "lower_quant",
+    "BoundPlan", "ExecutionPlan", "compile_model",
+]

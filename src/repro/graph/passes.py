@@ -1,0 +1,182 @@
+"""Graph passes: fusion, quantization lowering, dead-quantize elimination.
+
+The pass pipeline turns the traced layer-by-layer graph into the paper's
+deep pipeline (DESIGN.md §8):
+
+  1. ``fuse_conv_blocks`` — every single-consumer Conv2D → Relu → MaxPool2
+     chain collapses into one ``FusedConvBlockNode``, executed by the
+     ``fused_conv_block`` op family (conv window pipeline + bias + relu +
+     2×2 pool in one kernel; the pre-pool activation never round-trips
+     HBM — §III.B's between-stage streaming, lifted between layers).
+
+  2. ``lower_quant`` — makes the plan's quantization mode *explicit* as
+     QuantizeNodes so downstream ops run with ``quant="none"``:
+     weights get per-ref quantize nodes marked ``constant`` (foldable once
+     by ``ExecutionPlan.bind`` — the scale constant-folding), activations
+     get per-edge quantize nodes, and qformat conv/fused outputs get the
+     paper's post-accumulate lattice snap. Dense nodes keep their quant in
+     the executor (the int8 dense path needs per-token dynamic scales);
+     their *weight* QTensor still folds, in ``bind`` rather than as a
+     graph node.
+
+  3. ``eliminate_dead_quantize`` — the Qm.n snap is idempotent and
+     commutes with relu/maxpool/flatten (monotone, 0-preserving), so an
+     activation quantize whose producer chain is provably lattice-valued
+     is dead and is removed. This is why the fused pipeline quantizes once
+     per block instead of twice per layer boundary.
+
+Every pass is ``Graph -> Graph`` and re-validates; numerics after the full
+pipeline match the eager model exactly (bitwise per backend) — pinned by
+``tests/test_graph.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core.quantize import QFormat
+from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
+                            FusedConvBlockNode, Graph, MaxPool2Node, Node,
+                            QuantizeNode, ReluNode, TensorSpec)
+
+__all__ = ["fuse_conv_blocks", "lower_quant", "eliminate_dead_quantize",
+           "default_passes"]
+
+
+def _single_consumer(graph: Graph, nid: int) -> Node | None:
+    cons = graph.consumers(nid)
+    return cons[0] if len(cons) == 1 and graph.output_id != nid else None
+
+
+def fuse_conv_blocks(graph: Graph) -> Graph:
+    """Conv2D → Relu → MaxPool2 (linear, single-consumer) ⇒ one
+    FusedConvBlockNode carrying the pool's id (so downstream inputs and
+    the graph output stay valid)."""
+    fused: list[Node] = []
+    skip: set[int] = set()
+    for node in graph:
+        if node.id in skip:
+            continue
+        if isinstance(node, Conv2DNode):
+            r = _single_consumer(graph, node.id)
+            if isinstance(r, ReluNode):
+                p = _single_consumer(graph, r.id)
+                if isinstance(p, MaxPool2Node):
+                    fused.append(FusedConvBlockNode(
+                        id=p.id, inputs=node.inputs, out=p.out,
+                        w=node.w, b=node.b, stride=node.stride, odd=p.odd))
+                    skip.update({r.id, p.id})
+                    continue
+        fused.append(node)
+    # creation order kept nodes topologically sorted; the fused node uses
+    # the pool's (later) id but sits at the conv's position, which is
+    # still before every consumer
+    return replace(graph, nodes=tuple(fused)).validate()
+
+
+def _quantize_node(nid: int, src: int, spec: TensorSpec, kind: str,
+                   q: QFormat, constant: bool = False,
+                   ref=None) -> QuantizeNode:
+    return QuantizeNode(id=nid, inputs=(src,), out=spec, kind=kind,
+                        int_bits=q.int_bits, frac_bits=q.frac_bits,
+                        constant=constant, ref=ref)
+
+
+def lower_quant(graph: Graph, quant: str,
+                qformat: QFormat | None = None) -> Graph:
+    """Insert explicit QuantizeNodes per ``quant`` mode.
+
+    Replicates exactly what ``repro.ops.conv2d`` / ``fused_conv_block``
+    do internally under a quantized ExecPolicy — but as graph structure,
+    so weight quantization becomes a foldable constant and redundant
+    activation snaps become visible to DQE.
+    """
+    if quant == "none":
+        return graph
+    if quant not in ("qformat", "int8"):
+        raise ValueError(f"unknown quant mode {quant!r}")
+    q = qformat or QFormat()
+    nodes: list[Node] = []
+    nid = graph.next_id()
+    rewired: dict[int, int] = {}      # producer id -> quantized-value id
+
+    def _wref(w, kind):
+        nonlocal nid
+        node = replace(_quantize_node(nid, -1, TensorSpec(w.shape, w.dtype),
+                                      kind, q, constant=True, ref=w),
+                       inputs=())
+        nodes.append(node)
+        nid += 1
+        return node.id
+
+    for node in graph:
+        inputs = tuple(rewired.get(i, i) for i in node.inputs)
+        if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
+            # activation quantize on the conv input edge
+            act_kind = "qformat" if quant == "qformat" else "int8_act"
+            src = inputs[0]
+            src_spec = graph.node(node.inputs[0]).out
+            aq = _quantize_node(nid, src, src_spec, act_kind, q)
+            nodes.append(aq)
+            nid += 1
+            wkind = ("qformat" if quant == "qformat" else "int8_conv_weight")
+            wq = _wref(node.w, wkind)
+            bq = None
+            if node.b is not None and quant == "qformat":
+                bq = _wref(node.b, "qformat")
+            # weight refs are rebound to quantize-node ids at execution
+            # time via `inputs`; keep the ref fields for introspection
+            lowered = replace(node, inputs=(aq.id, wq) +
+                              (() if bq is None else (bq,)))
+            nodes.append(lowered)
+            if quant == "qformat":
+                oq = _quantize_node(nid, node.id, node.out, "qformat", q)
+                nodes.append(oq)
+                nid += 1
+                rewired[node.id] = oq.id
+        else:
+            nodes.append(replace(node, inputs=inputs))
+    out = rewired.get(graph.output_id, graph.output_id)
+    return replace(graph, nodes=tuple(nodes), output_id=out).validate()
+
+
+def _lattice_valued(graph: Graph, nid: int, q: QuantizeNode) -> bool:
+    """True if %nid provably lies on q's Qm.n lattice: produced by an
+    equal-format qformat quantize, or by a lattice-preserving op (relu,
+    maxpool, flatten) over lattice values."""
+    node = graph.node(nid)
+    if isinstance(node, QuantizeNode):
+        return (node.kind == "qformat" and node.int_bits == q.int_bits
+                and node.frac_bits == q.frac_bits)
+    if isinstance(node, (ReluNode, MaxPool2Node, FlattenNode)):
+        return _lattice_valued(graph, node.inputs[0], q)
+    return False
+
+
+def eliminate_dead_quantize(graph: Graph) -> Graph:
+    """Remove idempotent activation quantizes (qformat over already-
+    lattice values). Weight (constant) quantizes and int8 activation
+    quantizes are never dead (int8 scales are data-dependent)."""
+    changed = True
+    while changed:
+        changed = False
+        for node in graph:
+            if (isinstance(node, QuantizeNode) and not node.constant
+                    and node.kind == "qformat" and node.inputs
+                    and _lattice_valued(graph, node.inputs[0], node)):
+                graph = replace(
+                    graph,
+                    nodes=tuple(n for n in graph if n.id != node.id))
+                graph = graph.replace_input(node.id, node.inputs[0])
+                changed = True
+                break
+    return graph.validate()
+
+
+def default_passes(graph: Graph, quant: str = "none",
+                   qformat: QFormat | None = None,
+                   fuse: bool = True) -> Graph:
+    """The standard pipeline: fuse → lower quant → DQE."""
+    if fuse:
+        graph = fuse_conv_blocks(graph)
+    graph = lower_quant(graph, quant, qformat)
+    return eliminate_dead_quantize(graph)

@@ -1,0 +1,216 @@
+"""ExecutionPlan: the static, deep-pipelined execution of a compiled graph.
+
+``compile_model(model, ...)`` (re-exported as ``PaperCNN.compile``) runs
+trace → passes → plan. The resulting ``ExecutionPlan`` is the software
+analogue of the paper's synthesized accelerator:
+
+  * **static** — node list, shapes, fusion decisions and quantization
+    points are fixed at compile time; calling it is pure data movement
+    through a known pipeline (and therefore cleanly ``jax.jit``-able);
+  * **registry-dispatched** — every compute stage goes through the
+    ``repro.ops`` registry under the ambient ``ExecPolicy`` (backend
+    preference, interpret mode, tiling), so one plan runs on every
+    registered backend of the platform;
+  * **quant-baked** — the quantization mode is part of the artifact (like
+    a bitstream's number format). The lowered graph carries explicit
+    QuantizeNodes and all conv stages execute with ``quant="none"``;
+    asking the plan to run under a *different* ambient quant raises
+    instead of silently recompiling.
+
+``plan.bind(params)`` folds the constant (weight) quantize nodes once and
+returns a ``BoundPlan`` — per-batch calls then skip weight requantization
+entirely, the scale constant-folding of DESIGN.md §8.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QFormat, quantize_int8
+from repro.core.window import maxpool2
+from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
+                            FusedConvBlockNode, Graph, InputNode,
+                            MaxPool2Node, QuantizeNode, ReluNode)
+from repro.graph.passes import default_passes
+from repro.graph.trace import trace
+from repro.ops.policy import ExecPolicy, current_policy
+
+__all__ = ["ExecutionPlan", "BoundPlan", "compile_model"]
+
+
+def _apply_quantize(node: QuantizeNode, val, q: QFormat):
+    if node.kind == "qformat":
+        return q.quantize(val)
+    if node.kind == "int8_act":
+        t = quantize_int8(val, axis=None)
+        return t.codes.astype(jnp.float32) * t.scale
+    if node.kind == "int8_conv_weight":
+        m = val.shape[0]
+        t = quantize_int8(val.reshape(m, -1), axis=-1)
+        return (t.codes.astype(jnp.float32) * t.scale).reshape(val.shape)
+    raise ValueError(f"unknown quantize kind {node.kind!r}")
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """A compiled graph + its baked quantization, executable as
+    ``plan(params, images)``."""
+
+    graph: Graph
+    quant: str = "none"
+    qformat: QFormat = field(default_factory=QFormat)
+    compile_policy: ExecPolicy | None = None
+
+    # ---------- policy resolution ----------
+    def _base_policy(self, policy: ExecPolicy | None) -> ExecPolicy:
+        pol = policy
+        if pol is None:
+            pol = self.compile_policy
+        if pol is None:
+            pol = current_policy()
+        if pol.quant not in ("none", self.quant):
+            raise ValueError(
+                f"plan was compiled for quant={self.quant!r} but is being "
+                f"run under quant={pol.quant!r}; recompile with "
+                f".compile(policy=...) for a different number format")
+        # quantization is explicit graph structure now — compute stages
+        # run quant-free; dense keeps its mode (per-token int8 scales are
+        # dynamic and live in ops.dense)
+        return pol.with_options(quant="none")
+
+    # ---------- execution ----------
+    def __call__(self, params, x, *, policy: ExecPolicy | None = None,
+                 _folded: dict | None = None):
+        from repro.ops import conv2d, dense, fused_conv_block
+        base = self._base_policy(policy)
+        dense_pol = base.with_options(quant=self.quant, qformat=self.qformat)
+        env: dict[int, jax.Array] = {}
+        folded = _folded or {}
+
+        def _weight(node, idx, attr):
+            """Weight operand: lowered graphs route it through a quantize
+            node (possibly pre-folded); unlowered ones read the ParamRef."""
+            if len(node.inputs) > idx:
+                return env[node.inputs[idx]]
+            ref = getattr(node, attr)
+            return None if ref is None else ref.fetch(params)
+
+        for node in self.graph:
+            if isinstance(node, InputNode):
+                env[node.id] = x
+            elif isinstance(node, QuantizeNode):
+                if node.id in folded:
+                    env[node.id] = folded[node.id]
+                    continue
+                val = (node.ref.fetch(params) if node.constant
+                       else env[node.inputs[0]])
+                env[node.id] = _apply_quantize(node, val, self.qformat)
+            elif isinstance(node, Conv2DNode):
+                env[node.id] = conv2d(
+                    env[node.inputs[0]], _weight(node, 1, "w"),
+                    _weight(node, 2, "b"), stride=node.stride, policy=base)
+            elif isinstance(node, FusedConvBlockNode):
+                env[node.id] = fused_conv_block(
+                    env[node.inputs[0]], _weight(node, 1, "w"),
+                    _weight(node, 2, "b"), stride=node.stride,
+                    odd=node.odd, policy=base)
+            elif isinstance(node, ReluNode):
+                env[node.id] = jax.nn.relu(env[node.inputs[0]])
+            elif isinstance(node, MaxPool2Node):
+                env[node.id] = maxpool2(env[node.inputs[0]], odd=node.odd)
+            elif isinstance(node, FlattenNode):
+                v = env[node.inputs[0]]
+                env[node.id] = v.reshape(v.shape[0], -1)
+            elif isinstance(node, DenseNode):
+                wq = folded.get(node.id)
+                if wq is not None:
+                    # bind pre-quantized this dense weight: run the real
+                    # int8 datapath directly (== ops.dense under int8)
+                    from repro.ops import qdense
+                    xv = env[node.inputs[0]]
+                    out = qdense(xv, wq, out_dtype=xv.dtype, policy=base)
+                    b = _weight(node, 2, "b")
+                    env[node.id] = out if b is None else out + b
+                else:
+                    env[node.id] = dense(
+                        env[node.inputs[0]], _weight(node, 1, "w"),
+                        _weight(node, 2, "b"), policy=dense_pol)
+            else:
+                raise TypeError(f"no executor for node {node.pretty()}")
+        return env[self.graph.output_id]
+
+    # ---------- constant folding ----------
+    def bind(self, params, *, policy: ExecPolicy | None = None
+             ) -> "BoundPlan":
+        """Fold weight quantization against ``params`` now: every
+        constant QuantizeNode (conv weights/biases), plus — under int8 —
+        each dense layer's per-output-channel QTensor, so per-batch calls
+        skip weight requantization entirely (only the per-token activation
+        scales stay dynamic)."""
+        folded = {
+            node.id: _apply_quantize(node, node.ref.fetch(params),
+                                     self.qformat)
+            for node in self.graph
+            if isinstance(node, QuantizeNode) and node.constant}
+        if self.quant == "int8":
+            for node in self.graph:
+                if isinstance(node, DenseNode):
+                    folded[node.id] = quantize_int8(node.w.fetch(params),
+                                                    axis=0)
+        return BoundPlan(plan=self, params=params, folded=folded,
+                         policy=policy)
+
+    # ---------- introspection ----------
+    def stages(self) -> list[str]:
+        return [n.pretty() for n in self.graph]
+
+    def num_fused(self) -> int:
+        return sum(isinstance(n, FusedConvBlockNode) for n in self.graph)
+
+    def pretty(self) -> str:
+        head = (f"ExecutionPlan(quant={self.quant}, "
+                f"{len(self.graph)} nodes, {self.num_fused()} fused)")
+        return head + "\n" + self.graph.pretty()
+
+
+@dataclass(frozen=True)
+class BoundPlan:
+    """An ExecutionPlan closed over one params pytree with weight
+    quantization pre-folded — call as ``bound(images)``."""
+
+    plan: ExecutionPlan
+    params: object
+    folded: dict
+    policy: ExecPolicy | None = None
+
+    def __call__(self, x, *, policy: ExecPolicy | None = None):
+        return self.plan(self.params, x,
+                         policy=policy if policy is not None else self.policy,
+                         _folded=self.folded)
+
+
+def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
+                  policy: ExecPolicy | None = None, fuse: bool = True,
+                  dtype: str = "float32") -> ExecutionPlan:
+    """trace → passes → plan for any model whose forward routes through
+    the hooked functional layer (DESIGN.md §8).
+
+    The quantization mode is resolved now (explicit ``policy`` >
+    model-config policy > ambient ``use_policy``) and baked into the
+    plan; backend/interpret/tiling stay dynamic through the registry.
+    """
+    if input_shape is None:
+        input_shape = model.input_shape()
+    pol = policy
+    if pol is None:
+        cfg_pol = getattr(model, "cfg", None)
+        exec_pol = getattr(cfg_pol, "exec_policy", None)
+        pol = exec_pol() if callable(exec_pol) else None
+    quant_pol = pol if pol is not None else current_policy()
+    graph = trace(model, tuple(input_shape), dtype)
+    graph = default_passes(graph, quant=quant_pol.quant,
+                           qformat=quant_pol.qformat, fuse=fuse)
+    return ExecutionPlan(graph=graph, quant=quant_pol.quant,
+                         qformat=quant_pol.qformat, compile_policy=pol)

@@ -1,0 +1,186 @@
+"""Tracer: lift a core.conv-based model into the repro.graph IR.
+
+``trace(model, input_shape)`` runs the model's ``forward`` once with a
+``TracedArray`` in place of the image batch and a params pytree of
+``ParamRef`` leaves (built shape-only via ``jax.eval_shape`` — no weights
+are materialized). The repo's functional layer is duck-type hooked:
+
+  * ``core.conv.conv2d_apply``   checks for ``graph_conv2d`` on its input,
+  * ``core.window.maxpool2``     checks for ``graph_maxpool2``,
+  * the ``relu`` / ``flatten`` / ``dense`` wrappers below record nodes for
+    a ``TracedArray`` and defer to ``jax.nn.relu`` / ``reshape`` /
+    ``repro.ops.dense`` for real arrays — so one ``forward`` body is both
+    the eager model and the graph program (DESIGN.md §8).
+
+Shape inference happens during tracing (conv/pool output sizes via the
+paper's Eq. 1–2 helpers), so a model whose sizing is inconsistent — e.g. a
+2×2 pool over an odd feature map under ``odd="raise"`` — fails at *compile*
+time, like an FPGA design failing synthesis rather than misbehaving on
+silicon.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core.window import conv_output_size, pool_output_size
+from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode, Graph,
+                            InputNode, MaxPool2Node, Node, ParamRef,
+                            ReluNode, TensorSpec)
+
+__all__ = ["TracedArray", "GraphBuilder", "param_refs", "trace",
+           "relu", "flatten", "dense"]
+
+
+@dataclass
+class GraphBuilder:
+    """Accumulates nodes in creation (= topological) order."""
+
+    nodes: list[Node] = field(default_factory=list)
+
+    def add(self, cls, inputs: tuple[int, ...], out: TensorSpec,
+            **attrs) -> "TracedArray":
+        node = cls(id=len(self.nodes), inputs=inputs, out=out, **attrs)
+        self.nodes.append(node)
+        return TracedArray(self, node.id, out)
+
+    def input(self, spec: TensorSpec) -> "TracedArray":
+        return self.add(InputNode, (), spec)
+
+    def finish(self, output: "TracedArray") -> Graph:
+        return Graph(nodes=tuple(self.nodes), input_id=0,
+                     output_id=output.node_id).validate()
+
+
+@dataclass
+class TracedArray:
+    """The symbolic value flowing through ``forward`` during tracing.
+
+    Carries only a static ``TensorSpec``; the ``graph_*`` methods are the
+    duck-typed hooks the functional layer dispatches on.
+    """
+
+    builder: GraphBuilder
+    node_id: int
+    spec: TensorSpec
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.spec.shape
+
+    @property
+    def ndim(self) -> int:
+        return len(self.spec.shape)
+
+    @property
+    def dtype(self) -> str:
+        return self.spec.dtype
+
+    def _emit(self, cls, out_shape: tuple[int, ...], **attrs):
+        return self.builder.add(cls, (self.node_id,),
+                                TensorSpec(tuple(out_shape), self.dtype),
+                                **attrs)
+
+    # ---------- hooks the functional layer dispatches on ----------
+    def graph_conv2d(self, params: dict, cfg) -> "TracedArray":
+        w: ParamRef = params["w"]
+        b: ParamRef | None = params.get("b")
+        bsz, n, h, wd = self.shape
+        m, n2, kh, kw = w.shape
+        if n != n2:
+            raise ValueError(f"conv2d: input has {n} channels, weight "
+                             f"{w} expects {n2}")
+        ho = conv_output_size(h, kh, cfg.stride[0])
+        wo = conv_output_size(wd, kw, cfg.stride[1])
+        return self._emit(Conv2DNode, (bsz, m, ho, wo), w=w, b=b,
+                          stride=tuple(cfg.stride))
+
+    def graph_maxpool2(self, *, odd: str = "raise") -> "TracedArray":
+        bsz, c, h, w = self.shape
+        out = (bsz, c, pool_output_size(h, odd), pool_output_size(w, odd))
+        return self._emit(MaxPool2Node, out, odd=odd)
+
+    def graph_relu(self) -> "TracedArray":
+        return self._emit(ReluNode, self.shape)
+
+    def graph_flatten(self) -> "TracedArray":
+        bsz = self.shape[0]
+        return self._emit(FlattenNode,
+                          (bsz, int(np.prod(self.shape[1:]))))
+
+    def graph_dense(self, w: ParamRef,
+                    b: ParamRef | None = None) -> "TracedArray":
+        k, n = w.shape
+        if self.shape[-1] != k:
+            raise ValueError(f"dense: input dim {self.shape[-1]} vs "
+                             f"weight {w} dim {k}")
+        return self._emit(DenseNode, (*self.shape[:-1], n), w=w, b=b)
+
+
+# ------------------------------------------------------ functional layer
+# Trace-aware wrappers shared by eager execution and tracing. conv2d and
+# maxpool2 are hooked at their core definitions (core.conv / core.window);
+# these three cover the glue that previously lived inline in model code.
+
+def relu(x):
+    """jax.nn.relu, or a Relu node when tracing."""
+    hook = getattr(x, "graph_relu", None)
+    return hook() if hook is not None else jax.nn.relu(x)
+
+
+def flatten(x):
+    """(B, …) -> (B, -1), or a Flatten node when tracing."""
+    hook = getattr(x, "graph_flatten", None)
+    return hook() if hook is not None else x.reshape(x.shape[0], -1)
+
+
+def dense(x, w, b=None, *, policy=None):
+    """Policy-aware dense (repro.ops.dense), or a Dense node when
+    tracing."""
+    hook = getattr(x, "graph_dense", None)
+    if hook is not None:
+        return hook(w, b)
+    from repro.ops import dense as op
+    return op(x, w, b, policy=policy)
+
+
+# ---------------------------------------------------------------- trace
+
+def _key_name(entry) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def param_refs(model) -> dict:
+    """The model's params pytree with every leaf replaced by a ParamRef
+    (shape-only: ``jax.eval_shape`` never touches device memory)."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: ParamRef(
+            path=tuple(_key_name(p) for p in path),
+            shape=tuple(leaf.shape), dtype=str(leaf.dtype)),
+        shapes)
+
+
+def trace(model, input_shape: tuple[int, ...],
+          dtype: str = "float32") -> Graph:
+    """Lift ``model.forward`` into a Graph.
+
+    ``input_shape`` is an example (B, C, H, W); the traced batch dim is
+    informational — execution is batch-polymorphic.
+    """
+    refs = param_refs(model)
+    builder = GraphBuilder()
+    x = builder.input(TensorSpec(tuple(input_shape), dtype))
+    out = model.forward(refs, x)
+    if not isinstance(out, TracedArray):
+        raise TypeError(
+            f"{type(model).__name__}.forward returned {type(out).__name__} "
+            f"under tracing — its ops must route through the hooked "
+            f"functional layer (conv2d_apply, maxpool2, relu, flatten, "
+            f"dense)")
+    return builder.finish(out)

@@ -1,0 +1,12 @@
+"""fused_cwp — Conv Window Pipeline + bias + relu + 2×2 pool, one kernel.
+
+The ``pallas`` backend of the ``fused_conv_block`` op family (repro.ops):
+a window-stationary conv whose output tiles are sized in *pooled* rows, so
+the pre-pool activation lives only in VMEM/VREGs and never reaches HBM —
+the paper's deep pipeline (§III.B, Fig. 6/8) lifted across the
+conv→relu→pool layer boundary (DESIGN.md §8).
+"""
+from repro.kernels.fused_cwp.ops import fused_conv_window
+from repro.kernels.fused_cwp.ref import fused_conv_block_ref
+
+__all__ = ["fused_conv_window", "fused_conv_block_ref"]

@@ -1,0 +1,126 @@
+"""Fused conv+bias+relu+pool Pallas TPU kernel — the deep pipeline between
+layers (DESIGN.md §8).
+
+This extends the window-stationary conv kernel (kernels/conv_window) by one
+pipeline stage: each grid step computes a block of **pooled** output rows,
+so the pre-pool activation exists only as VREG/VMEM temporaries inside the
+step. Mapping of the paper's §III.B structure:
+
+  FPGA                          TPU (this kernel)
+  ----                          -----------------
+  window buffer streams rows    the input slab covers 2·PB conv rows
+    into conv                     ((2·PB−1)·sh + Kh input rows, halo
+                                  overlap with the next block)
+  conv → relu wired directly    the MXU contraction result is relu'd in
+                                  VREGs, never written back
+  2×2 pooling consumes the      a (2, 2) max reduction over the conv tile
+    conv stream in place          produces the (PB, Wo/2) pooled tile — the
+                                  only thing DMA'd back to HBM
+
+HBM traffic per block: input slab + weight tile + *pooled* output tile —
+the (MB, 2·PB, Wo) activation that the unfused path round-trips is gone,
+a 4×(+relu) output-traffic reduction on top of the window reuse.
+
+Grid: (B, Po/PB, M/MB) with Po = Ho/2 pooled rows. Constraints (enforced
+by the wrapper/predicate): Ho and Wo even (2×2/2 pool, VALID), PB divides
+Po after ragged-row padding, MB divides M.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_cwp_kernel(x_ref, w_ref, b_ref, o_ref, *,
+                      kh: int, kw: int, stride: tuple[int, int],
+                      pb: int, wo: int, n: int):
+    """One grid step: slab -> windows -> MXU -> +bias -> relu -> pool.
+
+    x_ref: (N, rows_in, W)  input slab, rows_in = (2·pb−1)·sh + kh
+    w_ref: (N·Kh·Kw, MB)    flat weight tile (feature order N, Kh, Kw)
+    b_ref: (1, MB)          bias tile
+    o_ref: (MB, PB, Wo/2)   pooled output tile
+    """
+    sh, sw = stride
+    rb = 2 * pb                             # conv rows per pooled block
+    slab = x_ref[...]                       # (N, rows_in, W) in VMEM
+
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            tap = jax.lax.slice(
+                slab,
+                (0, i, j),
+                (n, i + (rb - 1) * sh + 1, j + (wo - 1) * sw + 1),
+                (1, sh, sw),
+            )                               # (N, RB, Wo)
+            taps.append(tap)
+    win = jnp.stack(taps, axis=1)           # (N, Kh*Kw, RB, Wo)
+    win = win.reshape(n * kh * kw, rb * wo)
+
+    # conv: one MXU contraction = all η multiplies + the addition tree
+    acc = jax.lax.dot_general(
+        w_ref[...], win,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                       # (MB, RB*Wo)
+    acc = acc + b_ref[0, :][:, None]
+    # relu + 2×2/2 max pool, entirely in registers: pair rows and columns
+    act = jnp.maximum(acc, 0.0).reshape(-1, pb, 2, wo // 2, 2)
+    pooled = act.max(axis=(2, 4))           # (MB, PB, Wo/2)
+    o_ref[...] = pooled.astype(o_ref.dtype)
+
+
+def fused_cwp_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
+                     kh: int, kw: int, stride: tuple[int, int],
+                     pb: int, mb: int, interpret: bool) -> jax.Array:
+    """Launch. x: (B, N, H, W); wf: (η, M) flat weights; b: (M,).
+
+    pb: pooled output rows per block; mb: output channels per block.
+    Returns (B, M, Po, Wo/2) in x.dtype; requires even Ho/Wo, pb | Po,
+    mb | M (the wrapper pads/clamps).
+    """
+    bsz, n, h, w = x.shape
+    eta, m = wf.shape
+    assert eta == n * kh * kw, (eta, n, kh, kw)
+    sh, sw = stride
+    ho = (h - kh) // sh + 1
+    wo = (w - kw) // sw + 1
+    assert ho % 2 == 0 and wo % 2 == 0, (ho, wo)
+    po = ho // 2
+    assert po % pb == 0 and m % mb == 0, (po, pb, m, mb)
+    rows_in = (2 * pb - 1) * sh + kh
+
+    grid = (bsz, po // pb, m // mb)
+    kernel = functools.partial(_fused_cwp_kernel, kh=kh, kw=kw,
+                               stride=stride, pb=pb, wo=wo, n=n)
+
+    # same slab indexing as conv_window: element offsets for halo'd rows,
+    # one index map serving both pallas BlockSpec generations
+    slab_map = lambda bi, pi, mi: (bi, 0, pi * 2 * pb * sh, 0)  # noqa: E731
+    if hasattr(pl, "Squeezed"):          # newer pallas: per-dim block types
+        slab_spec = pl.BlockSpec((pl.Squeezed(), n, pl.Element(rows_in), w),
+                                 slab_map)
+        out_spec = pl.BlockSpec((pl.Squeezed(), mb, pb, wo // 2),
+                                lambda bi, pi, mi: (bi, mi, pi, 0))
+    else:                                # jax 0.4.x: Unblocked + None-squeeze
+        slab_spec = pl.BlockSpec((None, n, rows_in, w), slab_map,
+                                 indexing_mode=pl.Unblocked())
+        out_spec = pl.BlockSpec((None, mb, pb, wo // 2),
+                                lambda bi, pi, mi: (bi, mi, pi, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            slab_spec,
+            pl.BlockSpec((eta, mb), lambda bi, pi, mi: (0, mi)),
+            pl.BlockSpec((1, mb), lambda bi, pi, mi: (0, mi)),
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, m, po, wo // 2), x.dtype),
+        interpret=interpret,
+    )(x, wf, b)

@@ -1,0 +1,88 @@
+"""jit'd public wrapper for the fused conv+bias+relu+pool kernel.
+
+Same conventions as kernels/conv_window/ops.py: weights flatten to the
+(η, M) layout (feature order N, Kh, Kw — the line-buffer stream order),
+the pooled-row count is padded to the block size when ragged (by extending
+the input with dead rows and slicing the pooled result), and tile sizes
+resolve through the shared policy/tiling layer (DESIGN.md §7): explicit
+kwargs > ``ExecPolicy.tiling`` > tuning cache > VMEM-budget heuristic.
+
+Registered as the ``pallas`` backend of the ``fused_conv_block`` op family
+(repro.ops); its capability predicate requires even conv output dims (the
+2×2/2 pool consumes rows in pairs — odd sizes route to the ref/xla
+backends, which apply the explicit ``odd`` handling of core.window).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_cwp.kernel import fused_cwp_pallas
+from repro.ops.policy import ExecPolicy, current_policy
+from repro.ops.tiling import choose_fused_blocks, largest_divisor, tile_params
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("stride", "interpret", "pb", "mb"))
+def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None, *,
+                   stride: tuple[int, int], interpret: bool,
+                   pb: int, mb: int) -> jax.Array:
+    bsz, n, h, wdt = x.shape
+    m, n2, kh, kw = w.shape
+    assert n == n2, (x.shape, w.shape)
+    sh, sw = stride
+    ho = (h - kh) // sh + 1
+    po = ho // 2
+
+    # pad Po to a multiple of pb with dead input rows; the tail block pools
+    # windows over the pad and the result is sliced off
+    pad_pool = (-po) % pb
+    if pad_pool:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_pool * 2 * sh), (0, 0)))
+
+    wf = w.reshape(m, n * kh * kw).T        # (η, M), feature order (N,Kh,Kw)
+    bias = jnp.zeros((1, m), x.dtype) if b is None \
+        else b.reshape(1, m).astype(x.dtype)
+
+    out = fused_cwp_pallas(x, wf.astype(x.dtype), bias, kh=kh, kw=kw,
+                           stride=stride, pb=pb, mb=mb, interpret=interpret)
+    return out[:, :, :po, :]
+
+
+def fused_conv_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                      *, stride: tuple[int, int] = (1, 1),
+                      odd: str = "raise",
+                      interpret: bool | None = None,
+                      pb: int | None = None, mb: int | None = None,
+                      policy: ExecPolicy | None = None) -> jax.Array:
+    """Fused conv+bias+relu+2×2 pool. x: (B,N,H,W), w: (M,N,Kh,Kw) ->
+    (B,M,Ho/2,Wo/2). Requires even conv output dims (``odd`` modes other
+    than even inputs are served by the ref/xla backends)."""
+    pol = policy if policy is not None else current_policy()
+    if interpret is None:
+        interpret = pol.resolve_interpret()
+
+    n, h, wdt = x.shape[1], x.shape[2], x.shape[3]
+    m, kh, kw = w.shape[0], w.shape[2], w.shape[3]
+    sh, sw = stride
+    ho = (h - kh) // sh + 1
+    wo = (wdt - kw) // sw + 1
+    if ho % 2 or wo % 2:
+        raise ValueError(
+            f"fused kernel needs even conv output dims, got {ho}x{wo}")
+    defaults = choose_fused_blocks(n, h, wdt, m, kh, kw, tuple(stride),
+                                   x.dtype.itemsize)
+    sig = (n, h, wdt, m, kh, kw, *stride)
+    tiles = tile_params("fused_conv_block", sig, x.dtype, defaults,
+                        pol.tile_overrides)
+    if pb is not None:
+        tiles["pb"] = pb
+    if mb is not None:
+        tiles["mb"] = mb
+    # mb must divide M (grid constraint); pb is free — ragged Po is padded
+    tiles["mb"] = largest_divisor(m, tiles["mb"])
+    tiles["pb"] = max(1, tiles["pb"])
+    return _fused_cwp_jit(x, w, b, stride=tuple(stride), interpret=interpret,
+                          pb=tiles["pb"], mb=tiles["mb"])

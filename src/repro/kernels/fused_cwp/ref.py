@@ -1,0 +1,26 @@
+"""Reference oracle for the fused conv block: the unfused chain, verbatim.
+
+``fused_conv_block_ref`` is literally ``maxpool2(relu(conv2d_ref(...)))``
+— the paper-dataflow conv oracle (windows → odd-even addition tree →
+bias) followed by relu and the 2×2/2 pool. Fusion must be a *scheduling*
+transform, not a numeric one: the ``ref`` backend of the fused family is
+bitwise-identical to the layer-by-layer ref chain by construction, which
+is exactly what the parity suite pins.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.window import conv2d_ref, maxpool2
+
+__all__ = ["fused_conv_block_ref"]
+
+
+def fused_conv_block_ref(x: jax.Array, w: jax.Array,
+                         b: jax.Array | None = None,
+                         stride: tuple[int, int] = (1, 1),
+                         odd: str = "raise") -> jax.Array:
+    """x: (B,N,H,W) · w: (M,N,Kh,Kw) -> (B,M,Po,Qo); VALID conv, relu,
+    2×2/2 max pool (odd handling per core.window.maxpool2)."""
+    return maxpool2(jax.nn.relu(conv2d_ref(x, w, b, tuple(stride))),
+                    odd=odd)

@@ -5,6 +5,11 @@ the mesh. ``--reduced`` runs a small same-family config on CPU.
 A synthetic open-loop workload (``--requests`` with mixed prompt/decode
 lengths) is pushed through the engine; the report shows the occupancy the
 scheduler sustained and the resulting request/token throughput.
+
+CNN-family archs (``--arch mnist_cnn``) take the vision path instead:
+requests are images, and serving runs the fused ``ExecutionPlan`` from
+the graph compiler at one fixed batch shape (repro.serve.vision,
+DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -13,6 +18,37 @@ import time
 
 import jax
 import numpy as np
+
+
+def _serve_vision(spec, model, args) -> None:
+    """Micro-batched image serving through the compiled plan."""
+    from repro.serve.vision import VisionEngine, VisionEngineConfig
+
+    params = model.init(jax.random.PRNGKey(0))
+    engine = VisionEngine(model, params,
+                          VisionEngineConfig(batch=args.capacity))
+    plan = engine.plan
+    print(f"arch={args.arch} vision path: compiled plan with "
+          f"{plan.num_fused()} fused conv blocks, quant={plan.quant}")
+
+    rng = np.random.RandomState(1)
+    shape = model.input_shape()[1:]
+    for _ in range(args.requests):
+        engine.submit(rng.randn(*shape).astype(np.float32))
+
+    t0 = time.perf_counter()
+    results = engine.run()
+    wall = time.perf_counter() - t0
+
+    s = engine.stats
+    print(f"served {len(results)} images in {wall:.2f}s "
+          f"({s.images_per_s:.1f} img/s) over {s.steps} fixed-shape "
+          f"batches of {args.capacity}")
+    print(f"lane utilization {s.lane_utilization:.0%}")
+    if results:
+        sample = results[min(results)]
+        print(f"sample prediction (request {min(results)}): "
+              f"label={sample['label']}")
 
 
 def main() -> None:
@@ -37,6 +73,9 @@ def main() -> None:
 
     spec = get_arch(args.arch)
     model = spec.model()
+    if spec.family == "cnn":
+        _serve_vision(spec, model, args)
+        return
     if args.reduced:
         model = reduced_config(model)
     mesh = build_mesh(args.mesh)

@@ -13,20 +13,31 @@ Execution is an ``ExecPolicy`` (repro.ops, DESIGN.md §7): backend
 (window-stationary kernel) | auto, and quantization ``none`` | ``qformat``
 (paper-exact Q8.8) | ``int8``. The legacy ``path=``/``quant=`` string
 fields still work via the core.conv deprecation shim.
+
+``forward`` routes through the trace-aware functional layer
+(core.conv.conv2d_apply, core.window.maxpool2, graph.trace relu/flatten/
+dense), so the same body is both the eager model and the program that
+``PaperCNN.compile()`` lifts into a fused, static ``ExecutionPlan``
+(repro.graph, DESIGN.md §8).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Literal
+from typing import TYPE_CHECKING, Literal
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.conv import Conv2DConfig, conv2d_apply, conv2d_init
 from repro.core.quantize import QFormat
+from repro.core.window import maxpool2
+from repro.graph.trace import dense, flatten, relu
 from repro.models.common import dense_init
 from repro.ops import ExecPolicy
 from repro.sharding.logical import A
+
+if TYPE_CHECKING:
+    from repro.graph.plan import ExecutionPlan
 
 __all__ = ["PaperCNNConfig", "PaperCNN"]
 
@@ -60,6 +71,12 @@ class PaperCNNConfig:
                             path=self.path, quant=self.quant,
                             qformat=QFormat(), policy=self.policy)
 
+    def exec_policy(self) -> ExecPolicy | None:
+        """The model-wide ExecPolicy (same resolution as Conv2DConfig:
+        explicit ``policy`` wins, legacy strings map through the shim,
+        neither → None and the ambient ``use_policy`` applies)."""
+        return self.conv1_cfg.exec_policy()
+
     def feature_sizes(self) -> tuple[int, int, int]:
         """(post-pool1, post-pool2, flattened fc input)."""
         s1 = (self.img_size - self.conv1_k + 1) // 2
@@ -87,15 +104,13 @@ class PaperCNNConfig:
     active_param_count = param_count
 
 
-def _maxpool2(x: jax.Array) -> jax.Array:
-    """2×2 max pool, stride 2, NCHW (paper's pooling layers)."""
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
-
-
 class PaperCNN:
     def __init__(self, cfg: PaperCNNConfig):
         self.cfg = cfg
+
+    def input_shape(self, batch: int = 1) -> tuple[int, int, int, int]:
+        cfg = self.cfg
+        return (batch, cfg.in_channels, cfg.img_size, cfg.img_size)
 
     def init(self, key: jax.Array) -> dict:
         cfg = self.cfg
@@ -118,14 +133,32 @@ class PaperCNN:
         }
 
     def forward(self, params: dict, images: jax.Array) -> jax.Array:
-        """images: (B, C, H, W) -> logits (B, n_classes)."""
+        """images: (B, C, H, W) -> logits (B, n_classes).
+
+        Every op is trace-aware: with real arrays this is the eager
+        model; with a ``TracedArray`` it records the repro.graph IR. The
+        pools see even maps for the paper's sizes (26, 8); odd sizes now
+        raise at the pool instead of silently dropping a row/column.
+        """
         cfg = self.cfg
         x = conv2d_apply(params["conv1"], images, cfg.conv1_cfg)
-        x = _maxpool2(jax.nn.relu(x))
+        x = maxpool2(relu(x))
         x = conv2d_apply(params["conv2"], x, cfg.conv2_cfg)
-        x = _maxpool2(jax.nn.relu(x))
-        x = x.reshape(x.shape[0], -1)
-        return x @ params["fc_w"] + params["fc_b"]
+        x = maxpool2(relu(x))
+        x = flatten(x)
+        return dense(x, params["fc_w"], params["fc_b"],
+                     policy=cfg.exec_policy())
+
+    def compile(self, policy: ExecPolicy | None = None, *,
+                fuse: bool = True, batch: int = 1) -> "ExecutionPlan":
+        """Lift this model into a fused, static ``ExecutionPlan``
+        (repro.graph, DESIGN.md §8): trace → conv+relu+pool fusion →
+        quantization lowering → DQE. Quant mode resolves now (``policy``
+        > config policy > ambient ``use_policy``); backend selection
+        stays dynamic through the op registry at call time."""
+        from repro.graph.plan import compile_model
+        return compile_model(self, self.input_shape(batch), policy=policy,
+                             fuse=fuse)
 
     def loss(self, params: dict, batch: dict, ctx=None
              ) -> tuple[jax.Array, dict]:

@@ -21,8 +21,8 @@ from repro.ops.policy import (BACKENDS, QUANT_MODES, ExecPolicy,
 from repro.ops.tiling import TUNING_CACHE, TuningCache, tile_params
 from repro.ops.registry import (REGISTRY, BackendUnavailableError, OpRegistry,
                                 dispatch, list_backends, list_ops, register)
-from repro.ops.impls import (causal_conv1d, conv2d, dense, qdense, qmatmul,
-                             tree_reduce_sum)
+from repro.ops.impls import (causal_conv1d, conv2d, dense, fused_conv_block,
+                             qdense, qmatmul, tree_reduce_sum)
 from repro.ops.compat import PATH_TO_BACKEND, policy_from_legacy
 
 __all__ = [
@@ -31,7 +31,7 @@ __all__ = [
     "TUNING_CACHE", "TuningCache", "tile_params",
     "REGISTRY", "BackendUnavailableError", "OpRegistry", "dispatch",
     "list_backends", "list_ops", "register",
-    "causal_conv1d", "conv2d", "dense", "qdense", "qmatmul",
-    "tree_reduce_sum",
+    "causal_conv1d", "conv2d", "dense", "fused_conv_block", "qdense",
+    "qmatmul", "tree_reduce_sum",
     "PATH_TO_BACKEND", "policy_from_legacy",
 ]

@@ -1,12 +1,15 @@
 """Backend registrations + the public op entry points (DESIGN.md §7).
 
-Four op families, three backend flavors:
+Five op families, three backend flavors:
 
   op               ref (oracle)          xla (jnp/lax)        pallas (kernel)
   ---------------  --------------------  -------------------  ----------------
   conv2d           paper-dataflow        im2col einsum        window-stationary
                    (windows → odd-even   (MXU form)           kernel
                    tree)                                      (kernels/conv_window)
+  fused_conv_block unfused ref chain     im2col+relu+pool     fused conv window
+                   (conv2d_ref → relu    chain                pipeline
+                   → maxpool2, verbatim)                      (kernels/fused_cwp)
   tree_reduce_sum  odd-even pairwise     jnp.sum              addtree kernel
   qmatmul          int32-exact dot       int32-exact dot      blocked int8 GEMM
   causal_conv1d    stacked-window        shifted adds         —
@@ -29,13 +32,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import QTensor, quantize_int8
-from repro.core.window import conv2d_im2col, conv2d_ref
+from repro.core.window import conv2d_im2col, conv2d_ref, maxpool2
 from repro.core.addtree import pairwise_sum
 from repro.ops.policy import ExecPolicy, current_policy
 from repro.ops.registry import dispatch, register
 
-__all__ = ["conv2d", "tree_reduce_sum", "qmatmul", "qdense",
-           "causal_conv1d", "dense"]
+__all__ = ["conv2d", "fused_conv_block", "tree_reduce_sum", "qmatmul",
+           "qdense", "causal_conv1d", "dense"]
 
 
 # ---------------------------------------------------------------- conv2d
@@ -62,6 +65,29 @@ def _conv2d_pallas(x, w, b=None, *, stride=(1, 1), policy=None):
     return conv2d_window(x, w, b, stride=stride, policy=policy)
 
 
+def _conv_quant_operands(pol: ExecPolicy, x, w, b):
+    """Quantize conv operands per the policy (paper C4), shared by the
+    ``conv2d`` and ``fused_conv_block`` entry points."""
+    if pol.quant == "qformat":
+        # Paper-exact fixed point: weights, activations and (implicitly via
+        # the lattice) the products all live on the Qm.n grid; accumulation
+        # is exact because Q8.8*Q8.8 products fit fp32 integers.
+        q = pol.qformat
+        return q.quantize(x), q.quantize(w), \
+            (None if b is None else q.quantize(b))
+    if pol.quant == "int8":
+        # int8 weights per output channel; activations per-tensor; float
+        # accumulate here (dense layers use the real int8 kernel; conv
+        # dequantizes per output channel).
+        m = w.shape[0]
+        wq = quantize_int8(w.reshape(m, -1), axis=-1)
+        xq = quantize_int8(x, axis=None)
+        return (xq.codes.astype(jnp.float32) * xq.scale,
+                (wq.codes.astype(jnp.float32) * wq.scale).reshape(w.shape),
+                b)
+    return x, w, b
+
+
 def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
            stride: tuple[int, int] = (1, 1),
            policy: ExecPolicy | None = None) -> jax.Array:
@@ -73,24 +99,60 @@ def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
     ``core.conv`` deprecation shim.
     """
     pol = policy if policy is not None else current_policy()
-    if pol.quant == "qformat":
-        # Paper-exact fixed point: weights, activations and (implicitly via
-        # the lattice) the products all live on the Qm.n grid; accumulation
-        # is exact because Q8.8*Q8.8 products fit fp32 integers.
-        q = pol.qformat
-        x = q.quantize(x)
-        w = q.quantize(w)
-        b = None if b is None else q.quantize(b)
-    elif pol.quant == "int8":
-        # int8 weights per output channel; activations per-tensor; float
-        # accumulate here (dense layers use the real int8 kernel; conv
-        # dequantizes per output channel).
-        m = w.shape[0]
-        wq = quantize_int8(w.reshape(m, -1), axis=-1)
-        xq = quantize_int8(x, axis=None)
-        w = (wq.codes.astype(jnp.float32) * wq.scale).reshape(w.shape)
-        x = xq.codes.astype(jnp.float32) * xq.scale
+    x, w, b = _conv_quant_operands(pol, x, w, b)
     out = dispatch("conv2d", x, w, b, stride=stride, policy=pol)
+    if pol.quant == "qformat":
+        out = pol.qformat.quantize(out)
+    return out
+
+
+# ------------------------------------------------------ fused_conv_block
+
+@register("fused_conv_block", "ref", priority=1)
+def _fused_ref(x, w, b=None, *, stride=(1, 1), odd="raise", policy=None):
+    from repro.kernels.fused_cwp.ref import fused_conv_block_ref
+    return fused_conv_block_ref(x, w, b, stride, odd)
+
+
+@register("fused_conv_block", "xla", priority=10)
+def _fused_xla(x, w, b=None, *, stride=(1, 1), odd="raise", policy=None):
+    return maxpool2(jax.nn.relu(conv2d_im2col(x, w, b, stride)), odd=odd)
+
+
+def _fused_pallas_ok(x, w, b=None, *, stride=(1, 1), odd="raise", **_):
+    if not _conv2d_pallas_ok(x, w, b, stride=stride):
+        return False
+    ho = (x.shape[2] - w.shape[2]) // stride[0] + 1
+    wo = (x.shape[3] - w.shape[3]) // stride[1] + 1
+    # the fused kernel pools rows/cols in pairs; odd conv outputs take the
+    # ref/xla backends (which apply the explicit core.window odd handling)
+    return ho % 2 == 0 and wo % 2 == 0 and ho >= 2 and wo >= 2
+
+
+@register("fused_conv_block", "pallas", priority={"tpu": 30, "*": 5},
+          supports=_fused_pallas_ok)
+def _fused_pallas(x, w, b=None, *, stride=(1, 1), odd="raise", policy=None):
+    from repro.kernels.fused_cwp.ops import fused_conv_window  # lazy: pallas
+    return fused_conv_window(x, w, b, stride=stride, odd=odd, policy=policy)
+
+
+def fused_conv_block(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                     *, stride: tuple[int, int] = (1, 1), odd: str = "raise",
+                     policy: ExecPolicy | None = None) -> jax.Array:
+    """conv + bias + relu + 2×2/2 maxpool as ONE op: (B, N, H, W) ·
+    (M, N, Kh, Kw) -> (B, M, Ho/2, Wo/2) (odd dims per ``odd``).
+
+    The paper's deep pipeline between layers (§III.B, DESIGN.md §8): the
+    pre-pool activation never materializes in HBM on the pallas backend.
+    Quantization matches ``conv2d`` exactly; under ``qformat`` the output
+    snap commutes with relu/max (both monotone and 0-preserving), so
+    fused output == eager ``maxpool2(relu(conv2d(...)))`` bit-for-bit per
+    backend.
+    """
+    pol = policy if policy is not None else current_policy()
+    x, w, b = _conv_quant_operands(pol, x, w, b)
+    out = dispatch("fused_conv_block", x, w, b, stride=stride, odd=odd,
+                   policy=pol)
     if pol.quant == "qformat":
         out = pol.qformat.quantize(out)
     return out

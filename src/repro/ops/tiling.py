@@ -25,8 +25,8 @@ from typing import Mapping
 import numpy as np
 
 __all__ = ["largest_divisor", "padded_block", "choose_conv_blocks",
-           "choose_qmatmul_blocks", "choose_tree_rows",
-           "TuningCache", "TUNING_CACHE", "tile_params"]
+           "choose_fused_blocks", "choose_qmatmul_blocks",
+           "choose_tree_rows", "TuningCache", "TUNING_CACHE", "tile_params"]
 
 # VMEM working-set budget per grid step (v5e has 128 MiB VMEM per core;
 # stay well under to leave room for double buffering).
@@ -74,6 +74,33 @@ def choose_conv_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
         else:
             break
     return {"rb": best, "mb": mb}
+
+
+def choose_fused_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
+                        stride: tuple[int, int], itemsize: int
+                        ) -> dict[str, int]:
+    """Heuristic (pb, mb) for the fused conv+relu+pool kernel
+    (kernels/fused_cwp). ``pb`` counts *pooled* rows: one block covers
+    2·pb conv rows, so the budget carries the pre-pool activation tile
+    (mb × 2·pb × wo) that fusion keeps out of HBM."""
+    sh, _ = stride
+    ho = (h - kh) // sh + 1
+    wo = (w - kw) // stride[1] + 1
+    po = max(ho // 2, 1)
+    eta = n * kh * kw
+    mb = largest_divisor(m, 128)
+    best = 1
+    for pb in range(1, po + 1):
+        rb = 2 * pb
+        rows_in = (rb - 1) * sh + kh
+        bytes_needed = (n * rows_in * w + eta * rb * wo
+                        + eta * mb + mb * rb * wo
+                        + mb * pb * (wo // 2)) * itemsize
+        if bytes_needed <= VMEM_BUDGET_BYTES:
+            best = pb
+        else:
+            break
+    return {"pb": best, "mb": mb}
 
 
 def choose_qmatmul_blocks(m: int, n: int, k: int) -> dict[str, int]:

@@ -1,8 +1,9 @@
 """Serving subsystem: step factories + the continuous-batching engine.
 
-See DESIGN.md §6 for the architecture (RequestQueue -> Scheduler ->
+See DESIGN.md §6 for the LM architecture (RequestQueue -> Scheduler ->
 SlotKVCache -> Engine) and benchmarks/serve_throughput.py for the
-occupancy-vs-throughput measurement.
+occupancy-vs-throughput measurement. Vision workloads take the
+plan-compiled path instead (repro.serve.vision, DESIGN.md §8).
 """
 from repro.serve.cache import SlotKVCache
 from repro.serve.engine import Engine, EngineConfig, EngineStats
@@ -11,3 +12,4 @@ from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Scheduler, SchedulerStats
 from repro.serve.steps import (greedy_sample, make_decode_step,
                                make_prefill_step)
+from repro.serve.vision import VisionEngine, VisionEngineConfig, VisionStats

@@ -1,0 +1,128 @@
+"""Vision serving: fixed-batch image inference over a compiled plan.
+
+The LM engine (repro.serve.engine, DESIGN.md §6) keeps ONE compiled decode
+program and scales throughput with occupancy. This is the same argument
+for the paper's own workload — image classification: requests are
+micro-batched into a **fixed** batch shape and pushed through the fused
+``ExecutionPlan`` from the graph compiler (repro.graph, DESIGN.md §8), so
+there is exactly one compiled program regardless of queue depth, and the
+deep pipeline inside the plan (fused conv blocks) does the per-image work
+without HBM round-trips between conv/relu/pool.
+
+The plan is ``bind``-ed to the params at engine construction: weight
+quantization (int8 scales, Qm.n snapping) is folded once — the serving
+analogue of flashing the bitstream before traffic arrives.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ops import ExecPolicy
+
+__all__ = ["VisionEngineConfig", "VisionStats", "VisionEngine"]
+
+
+@dataclass(frozen=True)
+class VisionEngineConfig:
+    batch: int = 8                    # the one compiled batch shape
+    # None follows the normal compile() precedence (model-config policy,
+    # then ambient use_policy); set to pin a serving policy explicitly
+    policy: ExecPolicy | None = None
+    fuse: bool = True                 # compile with conv-block fusion
+
+
+@dataclass
+class VisionStats:
+    steps: int = 0
+    images: int = 0                   # real images served
+    lane_steps: int = 0               # batch × steps (work issued)
+    wall_s: float = 0.0
+
+    @property
+    def images_per_s(self) -> float:
+        return self.images / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def lane_utilization(self) -> float:
+        """Fraction of issued lanes that carried a real image (the
+        occupancy argument, per-batch instead of per-slot)."""
+        return self.images / self.lane_steps if self.lane_steps else 0.0
+
+
+class VisionEngine:
+    """Micro-batching classifier over ``model.compile()``.
+
+    The model must expose ``compile(policy=..., fuse=..., batch=...)``
+    and ``input_shape(batch)`` (PaperCNN does). Short final batches are
+    padded to the fixed shape and the pad lanes discarded host-side —
+    one XLA program, occupancy-scaled throughput.
+    """
+
+    def __init__(self, model, params,
+                 config: VisionEngineConfig = VisionEngineConfig()):
+        self.model = model
+        self.config = config
+        self.plan = model.compile(policy=config.policy, fuse=config.fuse,
+                                  batch=config.batch)
+        self._bound = self.plan.bind(params)
+        self._step = jax.jit(lambda x: self._bound(x))
+        self.stats = VisionStats()
+        self._queue: deque[tuple[int, np.ndarray]] = deque()
+        self.results: dict[int, dict] = {}
+        self._uid = 0
+
+    # ---------- request intake ----------
+    def submit(self, image) -> int:
+        """Queue one (C, H, W) image; returns its request id."""
+        img = np.asarray(image, np.float32)
+        want = self.model.input_shape()[1:]
+        if img.shape != tuple(want):
+            raise ValueError(f"image shape {img.shape} != model input "
+                             f"{tuple(want)}")
+        uid = self._uid
+        self._uid += 1
+        self._queue.append((uid, img))
+        return uid
+
+    # ---------- driving ----------
+    def step(self) -> int:
+        """Serve one fixed-shape batch from the queue; returns how many
+        real images it carried."""
+        if not self._queue:
+            return 0
+        t0 = time.perf_counter()
+        b = self.config.batch
+        uids, imgs = [], []
+        while self._queue and len(uids) < b:
+            uid, img = self._queue.popleft()
+            uids.append(uid)
+            imgs.append(img)
+        batch = np.stack(imgs)
+        if len(uids) < b:                       # pad to the compiled shape
+            pad = np.zeros((b - len(uids), *batch.shape[1:]), np.float32)
+            batch = np.concatenate([batch, pad])
+        logits = np.asarray(jax.device_get(
+            self._step(jnp.asarray(batch))))
+        for i, uid in enumerate(uids):
+            self.results[uid] = {"label": int(logits[i].argmax()),
+                                 "logits": logits[i]}
+        self.stats.steps += 1
+        self.stats.images += len(uids)
+        self.stats.lane_steps += b
+        self.stats.wall_s += time.perf_counter() - t0
+        return len(uids)
+
+    def run(self) -> dict[int, dict]:
+        """Drain the queue; returns {uid: {"label", "logits"}}."""
+        while self._queue:
+            self.step()
+        return self.results
+
+    def has_work(self) -> bool:
+        return bool(self._queue)

@@ -1,0 +1,242 @@
+"""The fusion graph compiler (repro.graph, DESIGN.md §8): IR, tracer,
+passes, plan execution, and the serving path that consumes it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import QFormat
+from repro.graph import (Conv2DNode, DenseNode, ExecutionPlan,
+                         FusedConvBlockNode, Graph, InputNode, MaxPool2Node,
+                         ParamRef, QuantizeNode, ReluNode, TensorSpec,
+                         compile_model, default_passes,
+                         eliminate_dead_quantize, fuse_conv_blocks,
+                         lower_quant, trace)
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.ops import ExecPolicy, list_backends, use_policy
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return PaperCNN(PaperCNNConfig())
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(KEY)
+
+
+@pytest.fixture(scope="module")
+def images():
+    return jax.random.normal(jax.random.PRNGKey(1), (4, 1, 28, 28))
+
+
+class TestTrace:
+    def test_paper_cnn_lifts_to_expected_ops(self, model):
+        g = trace(model, (1, 1, 28, 28))
+        assert g.ops() == ["input", "conv2d", "relu", "maxpool2",
+                           "conv2d", "relu", "maxpool2", "flatten", "dense"]
+
+    def test_static_shapes_match_paper_tab1(self, model):
+        g = trace(model, (1, 1, 28, 28))
+        shapes = [n.out.shape for n in g]
+        assert (1, 15, 26, 26) in shapes          # conv1
+        assert (1, 15, 13, 13) in shapes          # pool1
+        assert (1, 20, 8, 8) in shapes            # conv2
+        assert (1, 20, 4, 4) in shapes            # pool2
+        assert (1, 320) in shapes                 # flatten
+        assert g.node(g.output_id).out.shape == (1, 10)
+
+    def test_params_are_refs_not_values(self, model):
+        g = trace(model, (1, 1, 28, 28))
+        convs = [n for n in g if isinstance(n, Conv2DNode)]
+        assert [c.w.path for c in convs] == [("conv1", "w"), ("conv2", "w")]
+        assert all(isinstance(c.w, ParamRef) for c in convs)
+
+    def test_odd_pool_sizing_fails_at_trace_time(self):
+        """The paper's Eq. 1–2 drop is a compile-time error now: a config
+        whose pool would see an odd map raises during tracing."""
+        bad = PaperCNN(PaperCNNConfig(img_size=27))   # conv1 -> 25 (odd)
+        with pytest.raises(ValueError, match="odd"):
+            trace(bad, bad.input_shape())
+
+    def test_validate_catches_broken_graphs(self):
+        spec = TensorSpec((1, 4))
+        inp = InputNode(id=0, inputs=(), out=spec)
+        bad = ReluNode(id=1, inputs=(7,), out=spec)   # undefined producer
+        with pytest.raises(ValueError, match="before definition"):
+            Graph(nodes=(inp, bad)).validate()
+
+
+class TestPasses:
+    def test_fusion_collapses_conv_relu_pool(self, model):
+        g = fuse_conv_blocks(trace(model, (1, 1, 28, 28)))
+        assert g.ops() == ["input", "fused_conv_block", "fused_conv_block",
+                           "flatten", "dense"]
+        fused = [n for n in g if isinstance(n, FusedConvBlockNode)]
+        assert fused[0].out.shape == (1, 15, 13, 13)
+        assert fused[1].out.shape == (1, 20, 4, 4)
+
+    def test_qformat_lowering_inserts_and_folds(self, model):
+        g = lower_quant(fuse_conv_blocks(trace(model, (1, 1, 28, 28))),
+                        "qformat", QFormat())
+        quants = [n for n in g if isinstance(n, QuantizeNode)]
+        # per block: act-in + w + b + out; all weight/bias quants constant
+        assert len([q for q in quants if q.constant]) == 4
+        assert all(q.ref is not None for q in quants if q.constant)
+
+    def test_dqe_removes_idempotent_interblock_snap(self, model):
+        g = lower_quant(fuse_conv_blocks(trace(model, (1, 1, 28, 28))),
+                        "qformat", QFormat())
+        before = len([n for n in g
+                      if isinstance(n, QuantizeNode) and not n.constant])
+        g2 = eliminate_dead_quantize(g)
+        after = len([n for n in g2
+                     if isinstance(n, QuantizeNode) and not n.constant])
+        # block2's activation snap reads block1's (lattice) output snap
+        assert before == 4 and after == 3
+        g2.validate()
+
+    def test_int8_lowering_keeps_dynamic_act_quant(self, model):
+        g = default_passes(trace(model, (1, 1, 28, 28)), quant="int8")
+        quants = [n for n in g if isinstance(n, QuantizeNode)]
+        assert {q.kind for q in quants} == {"int8_act", "int8_conv_weight"}
+        # int8 activation scales are data-dependent — DQE must keep both
+        assert len([q for q in quants if q.kind == "int8_act"]) == 2
+
+    def test_none_quant_lowering_is_identity(self, model):
+        g = fuse_conv_blocks(trace(model, (1, 1, 28, 28)))
+        assert lower_quant(g, "none") is g
+
+
+class TestPlanParity:
+    def test_compile_matches_eager_bitwise_quant_none(self, model, params,
+                                                      images):
+        plan = model.compile()
+        assert plan.num_fused() == 2
+        want = np.asarray(model.forward(params, images))
+        got = np.asarray(plan(params, images))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
+    def test_all_backends_agree_with_eager(self, model, params, images,
+                                           backend):
+        plan = model.compile()
+        with use_policy(ExecPolicy(backend=backend)):
+            want = np.asarray(model.forward(params, images))
+            got = np.asarray(plan(params, images))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("quant", ["qformat", "int8"])
+    def test_quant_modes_match_eager(self, model, params, images, quant):
+        pol = ExecPolicy(quant=quant)
+        plan = model.compile(policy=pol)
+        with use_policy(pol):
+            want = np.asarray(model.forward(params, images))
+        got = np.asarray(plan(params, images))
+        np.testing.assert_array_equal(got, want)
+        if quant == "qformat":                 # outputs live on the lattice
+            codes = got / QFormat().step
+            np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+
+    def test_plan_close_to_float_under_quant(self, model, params, images):
+        base = np.asarray(model.forward(params, images))
+        for quant in ("qformat", "int8"):
+            got = np.asarray(model.compile(
+                policy=ExecPolicy(quant=quant))(params, images))
+            assert np.abs(got - base).max() < 0.25, quant
+
+    def test_bound_plan_folds_and_matches(self, model, params, images):
+        plan = model.compile(policy=ExecPolicy(quant="int8"))
+        bound = plan.bind(params)
+        # two conv weight quants + the dense weight QTensor
+        assert len(bound.folded) == 3
+        np.testing.assert_array_equal(np.asarray(bound(images)),
+                                      np.asarray(plan(params, images)))
+
+    def test_plan_is_jittable_and_batch_polymorphic(self, model, params):
+        plan = model.compile()                 # traced at batch 1
+        fn = jax.jit(lambda p, x: plan(p, x))
+        for b in (1, 3, 8):
+            x = jax.random.normal(jax.random.PRNGKey(b), (b, 1, 28, 28))
+            got = np.asarray(fn(params, x))
+            np.testing.assert_allclose(
+                got, np.asarray(model.forward(params, x)),
+                rtol=1e-5, atol=1e-5)
+
+    def test_unfused_plan_also_matches(self, model, params, images):
+        plan = model.compile(fuse=False)
+        assert plan.num_fused() == 0
+        np.testing.assert_array_equal(
+            np.asarray(plan(params, images)),
+            np.asarray(model.forward(params, images)))
+
+    def test_quant_mismatch_raises(self, model, params, images):
+        plan = model.compile()                 # baked quant="none"
+        with pytest.raises(ValueError, match="recompile"):
+            plan(params, images, policy=ExecPolicy(quant="qformat"))
+
+    def test_compile_resolves_ambient_policy(self, model, params, images):
+        with use_policy(ExecPolicy(quant="qformat")):
+            plan = model.compile()
+        assert plan.quant == "qformat"
+        got = np.asarray(plan(params, images))
+        codes = got / QFormat().step
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+
+
+class TestVisionServing:
+    def test_vision_engine_serves_plan_outputs(self, model, params):
+        from repro.serve.vision import VisionEngine, VisionEngineConfig
+        eng = VisionEngine(model, params, VisionEngineConfig(batch=4))
+        rng = np.random.RandomState(0)
+        imgs = [rng.randn(1, 28, 28).astype(np.float32) for _ in range(6)]
+        uids = [eng.submit(im) for im in imgs]
+        results = eng.run()
+        assert len(results) == 6
+        assert eng.stats.steps == 2            # 4 + 2(padded)
+        assert eng.stats.lane_utilization == pytest.approx(6 / 8)
+        want = np.asarray(model.forward(
+            params, jnp.asarray(np.stack(imgs))))
+        for i, uid in enumerate(uids):
+            assert results[uid]["label"] == int(want[i].argmax())
+
+    def test_vision_engine_respects_model_policy(self, params):
+        """A model configured for int8 must be SERVED in int8 — the
+        engine's default policy may not silently override it."""
+        from repro.serve.vision import VisionEngine, VisionEngineConfig
+        m = PaperCNN(PaperCNNConfig(policy=ExecPolicy(quant="int8")))
+        eng = VisionEngine(m, params, VisionEngineConfig(batch=2))
+        assert eng.plan.quant == "int8"
+
+    def test_vision_engine_rejects_wrong_shape(self, model, params):
+        from repro.serve.vision import VisionEngine, VisionEngineConfig
+        eng = VisionEngine(model, params, VisionEngineConfig(batch=2))
+        with pytest.raises(ValueError, match="shape"):
+            eng.submit(np.zeros((1, 14, 14), np.float32))
+
+
+class TestPipelineSweepSmoke:
+    def test_sweep_runs_and_reports(self):
+        import sys, pathlib
+        sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+        from benchmarks.pipeline_sweep import sweep
+        rows = sweep(batches=[2], quants=("none",), warmup=1, iters=2)
+        assert rows and {"gops_eager", "gops_plan", "speedup"} <= set(rows[0])
+
+    def test_trajectory_point_appends(self, tmp_path):
+        import sys, pathlib
+        sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+        from benchmarks.pipeline_sweep import trajectory_point
+        rows = [{"quant": "none", "batch": 8, "eager_us": 2.0, "plan_us": 1.0,
+                 "gops_eager": 1.0, "gops_plan": 2.0, "speedup": 2.0}]
+        out = tmp_path / "BENCH_pipeline.json"
+        p1 = trajectory_point(rows, out)
+        p2 = trajectory_point(rows, out)
+        import json
+        hist = json.loads(out.read_text())
+        assert len(hist) == 2
+        assert hist[0]["modes"]["none"]["fused_speedup"] == 2.0
+        assert p1["bench"] == p2["bench"] == "pipeline_sweep"

@@ -18,9 +18,9 @@ from repro.core.quantize import QFormat
 from repro.models.cnn import PaperCNN, PaperCNNConfig
 from repro.ops import (REGISTRY, BackendUnavailableError, ExecPolicy,
                        TuningCache, causal_conv1d, conv2d, current_policy,
-                       default_interpret, dense, list_backends, list_ops,
-                       policy_from_legacy, qmatmul, tile_params,
-                       tree_reduce_sum, use_policy)
+                       default_interpret, dense, fused_conv_block,
+                       list_backends, list_ops, policy_from_legacy, qmatmul,
+                       tile_params, tree_reduce_sum, use_policy)
 from repro.ops.tiling import TUNING_CACHE
 
 KEY = jax.random.PRNGKey(0)
@@ -34,17 +34,20 @@ def _for_backends(op):
 
 class TestRegistryContents:
     def test_op_families_registered(self):
-        assert set(list_ops()) >= {"conv2d", "tree_reduce_sum", "qmatmul",
+        assert set(list_ops()) >= {"conv2d", "fused_conv_block",
+                                   "tree_reduce_sum", "qmatmul",
                                    "causal_conv1d"}
 
     def test_every_kernel_family_has_three_flavors(self):
-        for op in ("conv2d", "tree_reduce_sum", "qmatmul"):
+        for op in ("conv2d", "fused_conv_block", "tree_reduce_sum",
+                   "qmatmul"):
             assert set(list_backends(op)) == {"ref", "xla", "pallas"}, op
 
     def test_auto_selection_off_tpu_prefers_xla(self):
         if jax.default_backend() == "tpu":
             pytest.skip("priority map differs on TPU")
-        for op in ("conv2d", "tree_reduce_sum", "qmatmul"):
+        for op in ("conv2d", "fused_conv_block", "tree_reduce_sum",
+                   "qmatmul"):
             assert list_backends(op)[0] == "xla"
 
     def test_unknown_backend_raises(self):
@@ -120,6 +123,89 @@ class TestConv2dParity:
         out = conv2d(x, wt, policy=ExecPolicy(quant="qformat", qformat=q))
         codes = np.asarray(out) / q.step
         np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+
+
+class TestFusedConvBlockParity:
+    """The new fused conv+bias+relu+pool family (DESIGN.md §8): every
+    backend must match the UNFUSED ref chain — bitwise under quant=none,
+    lattice-exact under qformat."""
+
+    # (B, N, H, W, M, kh, kw, sh, sw) with EVEN conv outputs
+    CASES = [
+        (1, 1, 28, 28, 15, 3, 3, 1, 1),    # paper conv1 block (26 -> 13)
+        (2, 15, 13, 13, 20, 6, 6, 1, 1),   # paper conv2 block (8 -> 4)
+        (2, 3, 9, 13, 4, 2, 2, 1, 1),      # even non-square (8x12 -> 4x6)
+        (1, 2, 13, 9, 6, 3, 3, 2, 2),      # stride 2 (6x4 pooled 3x2)
+    ]
+
+    @staticmethod
+    def _unfused_ref_chain(x, wt, bias, stride):
+        from repro.core.window import conv2d_ref, maxpool2
+        return maxpool2(jax.nn.relu(conv2d_ref(x, wt, bias, stride)),
+                        odd="drop")
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_backends_bitwise_vs_unfused_ref_under_none(self, case):
+        b, n, h, w, m, kh, kw, sh, sw = case
+        x = jax.random.normal(jax.random.PRNGKey(sum(case)), (b, n, h, w))
+        wt = jax.random.normal(jax.random.PRNGKey(1), (m, n, kh, kw))
+        bias = jax.random.normal(jax.random.PRNGKey(2), (m,))
+        want = np.asarray(self._unfused_ref_chain(x, wt, bias, (sh, sw)))
+        got_ref = np.asarray(fused_conv_block(
+            x, wt, bias, stride=(sh, sw), policy=ExecPolicy(backend="ref")))
+        np.testing.assert_array_equal(got_ref, want)   # bitwise: ref fused
+        for backend in list_backends("fused_conv_block"):
+            got = np.asarray(fused_conv_block(
+                x, wt, bias, stride=(sh, sw),
+                policy=ExecPolicy(backend=backend)))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"backend={backend}")
+
+    @pytest.mark.parametrize("quant", ["none", "qformat", "int8"])
+    def test_quant_modes_agree_across_backends(self, quant):
+        x = jax.random.normal(KEY, (2, 3, 10, 10))
+        wt = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 3, 3)) * 0.3
+        bias = jax.random.normal(jax.random.PRNGKey(2), (4,)) * 0.1
+        outs = {}
+        for backend in list_backends("fused_conv_block"):
+            pol = ExecPolicy(backend=backend, quant=quant, qformat=QFormat())
+            outs[backend] = np.asarray(fused_conv_block(x, wt, bias,
+                                                        policy=pol))
+        for backend, got in outs.items():
+            np.testing.assert_allclose(
+                got, outs["ref"], rtol=1e-4, atol=1e-4,
+                err_msg=f"quant={quant} backend={backend}")
+
+    def test_qformat_fused_is_lattice_exact_vs_eager_chain(self):
+        """Fused-with-post-pool-snap == snap-then-relu-then-pool (the
+        eager order): Q commutes with relu/max, so the two are EQUAL,
+        not just close."""
+        q = QFormat()
+        x = jax.random.normal(KEY, (2, 2, 8, 8))
+        wt = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 3, 3)) * 0.4
+        bias = jax.random.normal(jax.random.PRNGKey(2), (3,)) * 0.1
+        pol = ExecPolicy(backend="ref", quant="qformat", qformat=q)
+        fused = np.asarray(fused_conv_block(x, wt, bias, policy=pol))
+        # eager chain: conv (qformat, output already snapped) -> relu ->
+        # pool; relu/pool preserve lattice membership
+        from repro.core.window import maxpool2
+        conv_out = conv2d(x, wt, bias, policy=pol)
+        want = np.asarray(maxpool2(jax.nn.relu(conv_out), odd="drop"))
+        np.testing.assert_array_equal(fused, want)
+        codes = fused / q.step
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+
+    def test_pallas_predicate_rejects_odd_conv_output(self):
+        x = jax.random.normal(KEY, (1, 2, 7, 8))   # Ho = 5 (odd)
+        wt = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 3, 3))
+        with pytest.raises(BackendUnavailableError):
+            fused_conv_block(x, wt, policy=ExecPolicy(backend="pallas"),
+                             odd="drop")
+        # auto-dispatch falls through to a capable backend instead
+        out = fused_conv_block(x, wt, odd="drop")
+        want = self._unfused_ref_chain(x, wt, None, (1, 1))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
 
 
 class TestTreeReduceParity:

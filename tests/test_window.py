@@ -8,7 +8,8 @@ from hypothesis_compat import given, settings, st
 
 from repro.core.window import (LineBufferSim, conv2d_im2col, conv2d_ref,
                                conv_output_size, extract_windows,
-                               fill_latency, reuse_ratio)
+                               fill_latency, maxpool2, pool_output_size,
+                               reuse_ratio)
 
 
 class TestLaws:
@@ -55,6 +56,87 @@ class TestLineBufferSim:
         sim = LineBufferSim(3, 10)
         assert sim.wb.shape == (3, 3)
         assert sim.sb.shape == (2, 7)
+
+
+def _check_linebuffer_laws(k: int, w: int, h: int) -> None:
+    """One property check: fill latency T_u, II=1 window count, landmark
+    cycles, window contents, and the (K-1)/K reuse ratio."""
+    img = np.arange(h * w, dtype=np.float32).reshape(h, w)
+    sim = LineBufferSim(k, w)
+    wins = list(sim.run(img))
+    ho, wo = h - k + 1, w - k + 1
+    assert len(wins) == ho * wo
+    assert wins[0][0] == fill_latency(k, w) + 1
+    assert reuse_ratio(k) == pytest.approx((k - 1) / k)
+    for cyc, i, j, win in wins:
+        np.testing.assert_array_equal(win, img[i:i + k, j:j + k])
+    bycycle = {c: (i, j) for c, i, j, _ in wins}
+    assert bycycle[k * w] == (0, wo - 1)          # x_(W0) at cycle K·W
+    assert bycycle[h * w] == (ho - 1, wo - 1)     # last window at H·W
+
+
+class TestLineBufferProperties:
+    """Property sweep of the T_u law and reuse ratio over K ∈ {1..7},
+    including the degenerate K=1 (no shift buffer, T_u=0, reuse 0) and
+    the K == W edge (window spans the full row; SHIFT_BUFFER is empty
+    and WB row exits feed the row above directly)."""
+
+    @pytest.mark.parametrize("k", range(1, 8))
+    def test_sweep_k_1_to_7(self, k):
+        for w in (k, k + 1, k + 5):               # k == w is the edge case
+            _check_linebuffer_laws(k, w, h=k + 3)
+
+    def test_k_equals_w_storage(self):
+        sim = LineBufferSim(4, 4)
+        assert sim.sb.size == 0                   # no shift buffer at K==W
+        _check_linebuffer_laws(4, 4, 9)
+
+    @given(st.integers(1, 7), st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_laws(self, k, data):
+        w = data.draw(st.integers(k, k + 8))
+        h = data.draw(st.integers(k, k + 6))
+        _check_linebuffer_laws(k, w, h)
+
+
+class TestMaxPool2:
+    def test_even_matches_reduce_window(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 8, 6))
+        want = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+        np.testing.assert_array_equal(np.asarray(maxpool2(x)),
+                                      np.asarray(want))
+
+    def test_odd_raises_by_default(self):
+        """The old _maxpool2 silently dropped the last row/column on odd
+        maps; that is an explicit error now (paper Eq. 1–2 sizing)."""
+        x = jnp.zeros((1, 2, 5, 4))
+        with pytest.raises(ValueError, match="odd"):
+            maxpool2(x)
+        with pytest.raises(ValueError, match="odd"):
+            maxpool2(jnp.zeros((1, 2, 4, 7)))
+
+    def test_odd_drop_matches_eq_1_2_floor(self):
+        x = jnp.arange(1 * 1 * 5 * 5, dtype=jnp.float32).reshape(1, 1, 5, 5)
+        out = maxpool2(x, odd="drop")
+        assert out.shape == (1, 1, 2, 2)          # floor(5/2), Eq. 1–2
+        assert pool_output_size(5, "drop") == 2
+        # the dropped row/col never influences the output
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(maxpool2(x[:, :, :4, :4])))
+
+    def test_odd_pad_keeps_ceil_and_values(self):
+        x = jnp.arange(1 * 1 * 5 * 5, dtype=jnp.float32).reshape(1, 1, 5, 5)
+        out = maxpool2(x, odd="pad")
+        assert out.shape == (1, 1, 3, 3)          # ceil(5/2)
+        assert pool_output_size(5, "pad") == 3
+        # -inf padding: the ragged edge pools to the real maxima
+        np.testing.assert_array_equal(np.asarray(out[0, 0, -1]),
+                                      np.asarray(x[0, 0, -1, [1, 3, 4]]))
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="odd mode"):
+            maxpool2(jnp.zeros((1, 1, 4, 4)), odd="truncate")
 
 
 class TestConvOracles:
