@@ -1,0 +1,173 @@
+"""Channel-parallel plan sweep: GOPS × schedule × mesh size × quant mode.
+
+The paper's §III.A claim is that channel parallelism scales conv
+throughput with compute units; DESIGN.md §9 compiles that choice into the
+execution plan. This sweep measures it end to end: a shard-friendly CNN
+(channel counts divisible by every mesh size) is compiled per
+
+  * **schedule** — ``none`` (data-parallel batch sharding only), ``icp``
+    (Eq. 7 forced), ``ocp`` (Eq. 6 forced),
+  * **mesh**     — 1, 2, 4 devices (``1×k`` data×model for icp/ocp,
+    ``k×1`` for the data-parallel column),
+  * **quant**    — the plan's three number formats,
+
+and timed at each batch size; GOPS = flops_per_image × batch / time.
+A ``BENCH_shard.json`` trajectory point records, per (schedule, mesh,
+quant), the reference-batch GOPS plus each sharded cell's speedup over
+the mesh=1 unsharded plan, so later PRs can track whether the collective
+schedules keep paying.
+
+On CPU the sweep needs forced host devices: run standalone (the module
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before jax
+initializes). Inside ``benchmarks/run.py`` (jax already initialized,
+usually 1 device) mesh sizes beyond the device count are skipped with a
+note. As everywhere in benchmarks/: on CPU the *shape* of the curve is
+the claim, not the microseconds — expect ICP/data wins at larger batches
+and OCP losses (its replicated window extraction dominates off-TPU).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+if "jax" not in sys.modules:            # must precede jax device init
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = \
+            (_flags + " --xla_force_host_platform_device_count=4").strip()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import emit  # noqa: E402
+from benchmarks.pipeline_sweep import _best_us  # noqa: E402
+from repro.models.cnn import PaperCNN, PaperCNNConfig  # noqa: E402
+from repro.ops import ExecPolicy  # noqa: E402
+
+SCHEDULES = ("none", "icp", "ocp")
+MESHES = (1, 2, 4)
+QUANTS = ("none", "qformat", "int8")
+BATCHES = [8, 64]
+REFERENCE_BATCH = 64                    # where sharding should pay
+# shard-friendly paper-CNN scaling: every channel count divides 4
+SWEEP_CFG = dict(conv1_c=32, conv2_c=64)
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_shard.json"
+
+
+def _mesh(schedule: str, k: int):
+    """icp/ocp shard channels over ``model``; the data-parallel column
+    shards the batch over ``data``. k=1 still builds the mesh so every
+    row runs the same (shard_map) code path."""
+    devs = np.asarray(jax.devices()[:k])
+    if schedule == "none":
+        return jax.sharding.Mesh(devs.reshape(k, 1), ("data", "model"))
+    return jax.sharding.Mesh(devs.reshape(1, k), ("data", "model"))
+
+
+def sweep(schedules=SCHEDULES, meshes=MESHES, quants=QUANTS,
+          batches=BATCHES, *, warmup=2, iters=8):
+    """-> rows [{schedule, mesh, quant, batch, us, gops, speedup}];
+    ``speedup`` is vs the mesh=1 unsharded bound plan of the same
+    (quant, batch)."""
+    key = jax.random.PRNGKey(0)
+    cfg = PaperCNNConfig(name="shard_sweep_cnn", **SWEEP_CFG)
+    flops1 = cfg.flops_per_image()
+    model = PaperCNN(cfg)
+    params = model.init(key)
+    ndev = len(jax.devices())
+    rows = []
+    for quant in quants:
+        pol = ExecPolicy(quant=quant)
+        base = model.compile(policy=pol).bind(params)
+        base_fwd = jax.jit(lambda x, _b=base: _b(x))
+        base_us = {}
+        for b in batches:
+            x = jax.random.normal(key, (b, 1, 28, 28))
+            base_us[b] = _best_us(base_fwd, x, warmup=warmup, iters=iters)
+        for schedule in schedules:
+            for k in meshes:
+                if k > ndev:
+                    emit(f"shard/{quant}/{schedule}/mesh{k}/skipped", 0.0,
+                         f"needs {k} devices, have {ndev} (run standalone "
+                         f"for forced host devices)")
+                    continue
+                plan = model.compile(
+                    policy=pol.with_options(channel_parallel={
+                        "none": "none", "icp": "input",
+                        "ocp": "output"}[schedule]),
+                    mesh=_mesh(schedule, k))
+                bound = plan.bind(params)
+                fwd = jax.jit(lambda x, _b=bound: _b(x))
+                for b in batches:
+                    x = jax.random.normal(key, (b, 1, 28, 28))
+                    t = _best_us(fwd, x, warmup=warmup, iters=iters)
+                    row = {
+                        "schedule": schedule, "mesh": k, "quant": quant,
+                        "batch": b, "us": t,
+                        "gops": flops1 * b / t / 1e3,
+                        "speedup": base_us[b] / t,
+                    }
+                    rows.append(row)
+                    emit(f"shard/{quant}/{schedule}/mesh{k}/batch{b}", t,
+                         f"GOPS={row['gops']:.2f};"
+                         f"speedup_vs_mesh1={row['speedup']:.2f}x;"
+                         f"sharded_stages={plan.num_sharded()}")
+    return rows
+
+
+def trajectory_point(rows, path=BENCH_JSON) -> dict:
+    """Append one point per run: reference-batch GOPS per cell plus the
+    headline — the best sharded speedup over the unsharded plan."""
+    ref = [r for r in rows if r["batch"] == REFERENCE_BATCH] or rows
+    sharded = [r for r in rows if r["mesh"] > 1 and r["schedule"] != "none"]
+    best = max(sharded, key=lambda r: r["speedup"], default=None)
+    point = {
+        "bench": "shard_sweep",
+        "reference_batch": ref[0]["batch"],
+        "platform": jax.default_backend(),
+        "devices": len(jax.devices()),
+        "cells": {
+            f"{r['quant']}/{r['schedule']}/mesh{r['mesh']}": {
+                "gops": round(r["gops"], 3),
+                "speedup_vs_mesh1": round(r["speedup"], 3)}
+            for r in ref},
+        "best_sharded": None if best is None else {
+            "cell": f"{best['quant']}/{best['schedule']}/"
+                    f"mesh{best['mesh']}/batch{best['batch']}",
+            "speedup_vs_mesh1": round(best["speedup"], 3)},
+    }
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(point)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return point
+
+
+def run() -> None:
+    rows = sweep()
+    trajectory_point(rows)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI: mesh<=2, quant none, 1 batch")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_shard.json trajectory write")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        rows = sweep(meshes=(1, 2), quants=("none",), batches=[8],
+                     warmup=1, iters=3)
+    else:
+        rows = sweep()
+    if not args.no_json:
+        trajectory_point(rows)

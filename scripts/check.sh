@@ -10,15 +10,20 @@ python scripts/check_docs_links.py
 echo "== dispatch grep-gate (no path=/interpret= plumbing outside ops) =="
 python scripts/check_dispatch.py
 
-# the full tier-1 run already collects the parity + graph suites; run them
-# as their own step only when pytest args narrow the tier-1 selection below
+# the full tier-1 run already collects the parity + graph + shard suites;
+# run them as their own step only when pytest args narrow the tier-1
+# selection below
 if [ "$#" -gt 0 ]; then
-  echo "== op-registry cross-backend parity + graph-compiler suites =="
-  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q tests/test_ops_registry.py tests/test_graph.py
+  echo "== op-registry parity + graph-compiler + sharded-plan suites =="
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q tests/test_ops_registry.py tests/test_graph.py tests/test_shard_plan.py
 fi
 
 echo "== pipeline_sweep smoke (fused plan vs layer-by-layer) =="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.pipeline_sweep --smoke --no-json
+
+echo "== shard_sweep smoke (channel-parallel plans, 2 forced devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+  PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.shard_sweep --smoke --no-json
 
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -22,7 +22,15 @@ and
     layer chain that ``fused_conv_block`` / ``PaperCNN.compile()``
     replaces — anywhere EXCEPT ``src/repro/graph/`` (the compiler),
     ``src/repro/models/`` (the traceable forward definitions) and
-    ``src/repro/kernels/`` (the fused backends themselves).
+    ``src/repro/kernels/`` (the fused backends themselves);
+and
+
+  * a hand-rolled ``shard_map`` over a conv (a ``shard_map(`` call with a
+    conv/fused-conv dispatch in its neighborhood) anywhere EXCEPT
+    ``src/repro/core/parallelism.py`` (the paper-Eq. 6/7 schedules) and
+    ``src/repro/graph/`` (the compiler that routes placed stages there) —
+    new channel-parallel conv paths must go through the placement pass
+    (DESIGN.md §9), not ad-hoc collectives.
 
 Tests are exempt — they pin the compat/eager behavior on purpose.
 """
@@ -52,6 +60,15 @@ CONV_RE = re.compile(r"\bconv2d_apply\s*\(")
 RELU_RE = re.compile(r"\brelu\s*\(")
 POOL_RE = re.compile(r"\b(maxpool2|reduce_window)\s*\(")
 
+# hand-rolled channel-parallel conv: shard_map with a conv dispatch nearby
+# (the local body is defined just above the shard_map call)
+SHARD_ALLOWED_PREFIXES = ("src/repro/graph/",)
+SHARD_ALLOWED_FILES = ("src/repro/core/parallelism.py",)
+SHARD_WINDOW = 15                     # lines around shard_map( to scan
+SHARD_RE = re.compile(r"\bshard_map\s*\(")
+SHARD_CONV_RE = re.compile(
+    r"""\b(conv2d\w*|fused_conv\w*|_conv)\s*\(|['"](conv2d|fused_conv_block)['"]""")
+
 
 def _chain_violations(rel: str, lines: list[str]) -> list[tuple]:
     out = []
@@ -66,6 +83,18 @@ def _chain_violations(rel: str, lines: list[str]) -> list[tuple]:
     return out
 
 
+def _shard_conv_violations(rel: str, lines: list[str]) -> list[tuple]:
+    out = []
+    for i, line in enumerate(lines):
+        if not SHARD_RE.search(line):
+            continue
+        window = lines[max(0, i - SHARD_WINDOW):i + 1 + SHARD_WINDOW]
+        if any(SHARD_CONV_RE.search(l) for l in window):
+            out.append((rel, i + 1, "hand-rolled shard_map over conv",
+                        line.strip()))
+    return out
+
+
 def main() -> int:
     violations = []
     scanned = 0
@@ -75,6 +104,9 @@ def main() -> int:
             lines = path.read_text().splitlines()
             if not rel.startswith(CHAIN_ALLOWED_PREFIXES):
                 violations.extend(_chain_violations(rel, lines))
+            if not rel.startswith(SHARD_ALLOWED_PREFIXES) \
+                    and rel not in SHARD_ALLOWED_FILES:
+                violations.extend(_shard_conv_violations(rel, lines))
             if rel.startswith(ALLOWED_PREFIXES) or rel in ALLOWED_FILES:
                 continue
             scanned += 1
@@ -87,8 +119,9 @@ def main() -> int:
         for rel, lineno, label, line in violations:
             print(f"FAIL: {rel}:{lineno} [{label}] {line}")
         print("route execution choices through repro.ops ExecPolicy "
-              "(DESIGN.md §7) and conv pipelines through "
-              "repro.graph / fused_conv_block (DESIGN.md §8)")
+              "(DESIGN.md §7), conv pipelines through repro.graph / "
+              "fused_conv_block (DESIGN.md §8), and sharded convs through "
+              "core.parallelism via the placement pass (DESIGN.md §9)")
         return 1
     print("dispatch gate OK")
     return 0

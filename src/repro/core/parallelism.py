@@ -19,33 +19,112 @@ schedules become two sharding+collective patterns over the ``model`` axis:
 Both are exposed so the dichotomy is selectable per layer; they compose with
 batch sharding over ``data`` orthogonally. ``shard_map`` keeps the collective
 explicit (the psum *is* Fig. 3), rather than relying on pjit inference.
+
+Two op families get schedules here:
+
+* ``conv2d_channel_parallel`` — the bare conv (+ optional int8 requant
+  ``scale``, applied with the bias after the reduction is complete:
+  post-psum for ICP, per-shard for OCP);
+* ``fused_conv_block_channel_parallel`` — the deep-pipelined
+  conv+requant+bias+relu+pool stage of the graph compiler (DESIGN.md §9).
+  Under OCP the whole fused stage (one Pallas kernel on TPU) runs
+  per-shard. Under ICP only the conv produces *partials*; the Eq. 7 psum
+  completes the accumulation and the requant/bias/relu/pool epilogue runs
+  on the combined result — scale and bias after a partial sum would be
+  wrong, which is why the psum sits between the conv and the epilogue.
+
+This module is the single sanctioned home of ``shard_map``-over-conv
+(enforced by scripts/check_dispatch.py); the graph compiler routes sharded
+plan stages here, never hand-rolls its own collective.
 """
 from __future__ import annotations
 
 import enum
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.quantize import conv_epilogue
+from repro.core.window import maxpool2
 from repro.sharding.compat import shard_map
 
-__all__ = ["ChannelParallelism", "conv2d_channel_parallel"]
-
-
-def _conv(x, w, b, stride):
-    """Per-shard conv through the repro.ops registry (lazy import: core is
-    imported *by* the ops package). The active ExecPolicy picks the local
-    backend — auto lands on the XLA im2col form, the schedule's MXU shape."""
-    from repro.ops import conv2d
-    return conv2d(x, w, b, stride=stride)
+__all__ = ["ChannelParallelism", "conv2d_channel_parallel",
+           "fused_conv_block_channel_parallel"]
 
 
 class ChannelParallelism(enum.Enum):
     NONE = "none"
     OUTPUT = "output"   # paper Eq. (6): shard M, no collective
     INPUT = "input"     # paper Eq. (7): shard N, one psum
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis]
+
+
+def _validate(x, w, mesh: Mesh, mode: ChannelParallelism,
+              model_axis: str, data_axis: str | None) -> str | None:
+    """Static shape/mesh checks with actionable errors (instead of the
+    shard_map partition failure the raw specs would produce). Returns the
+    resolved batch spec (``data_axis`` or None)."""
+    if x.ndim != 4 or w.ndim != 4 or x.shape[1] != w.shape[1]:
+        raise ValueError(
+            f"channel-parallel conv needs x (B,N,H,W) and w (M,N,Kh,Kw) "
+            f"with matching N; got x {x.shape}, w {w.shape}")
+    if model_axis not in mesh.axis_names:
+        raise ValueError(f"mesh {dict(mesh.shape)} has no "
+                         f"{model_axis!r} axis")
+    msize = _axis_size(mesh, model_axis)
+    m, n = w.shape[0], w.shape[1]
+    if mode == ChannelParallelism.OUTPUT and m % msize:
+        raise ValueError(
+            f"OUTPUT-channel parallelism (paper Eq. 6) shards the M={m} "
+            f"output channels over {model_axis}={msize} devices, but "
+            f"{m} % {msize} != 0; pick a divisible channel count, a "
+            f"smaller mesh, or INPUT mode")
+    if mode == ChannelParallelism.INPUT and n % msize:
+        raise ValueError(
+            f"INPUT-channel parallelism (paper Eq. 7) shards the N={n} "
+            f"input channels over {model_axis}={msize} devices, but "
+            f"{n} % {msize} != 0; pick a divisible channel count, a "
+            f"smaller mesh, or OUTPUT mode")
+    batch_spec = data_axis if data_axis in mesh.axis_names else None
+    if batch_spec is not None:
+        dsize = _axis_size(mesh, batch_spec)
+        if x.shape[0] % dsize:
+            raise ValueError(
+                f"batch {x.shape[0]} does not divide the {batch_spec!r} "
+                f"axis ({dsize} devices); pad the batch or pass "
+                f"data_axis=None to replicate it")
+    return batch_spec
+
+
+def _conv(x, w, b, stride, policy):
+    """Per-shard conv through the repro.ops registry (lazy import: core is
+    imported *by* the ops package). The active ExecPolicy picks the local
+    backend — auto lands on the XLA im2col form, the schedule's MXU shape."""
+    from repro.ops.registry import dispatch
+    return dispatch("conv2d", x, w, b, stride=stride, policy=policy)
+
+
+def _operands(x, w, b, scale, x_spec, w_spec, v_spec):
+    """shard_map plumbing for the optional bias/scale operands (None
+    cannot cross a shard_map boundary): the (in_specs, args) to launch
+    with — ``v_spec`` covers both vector operands — and an ``unpack``
+    turning the local body's ``*rest`` back into (bias, scale)."""
+    in_specs = [x_spec, w_spec]
+    args = [x, w]
+    have_b, have_s = b is not None, scale is not None
+    for operand in (b, scale):
+        if operand is not None:
+            in_specs.append(v_spec)
+            args.append(operand)
+
+    def unpack(rest):
+        return (rest[0] if have_b else None,
+                rest[have_b] if have_s else None)
+
+    return tuple(in_specs), args, unpack
 
 
 def conv2d_channel_parallel(
@@ -56,46 +135,133 @@ def conv2d_channel_parallel(
     mesh: Mesh,
     mode: ChannelParallelism,
     stride: tuple[int, int] = (1, 1),
+    scale: jax.Array | None = None,
     model_axis: str = "model",
     data_axis: str | None = "data",
+    policy=None,
 ) -> jax.Array:
     """Distributed conv2d under the selected channel-parallel schedule.
 
     x: (B, N, H, W), w: (M, N, Kh, Kw), b: (M,)|None -> (B, M, Ho, Wo).
     Batch is sharded over ``data_axis`` when given; channels per ``mode``.
+    ``scale`` (M,) is the int8 requant epilogue factor (codes-in,
+    dequantized-out — see repro.ops.split_requant); under INPUT mode it is
+    applied after the psum, with the bias, exactly once.
     """
-    batch_spec = data_axis if data_axis in mesh.axis_names else None
-
+    stride = tuple(stride)
     if mode == ChannelParallelism.NONE:
-        return _conv(x, w, b, stride)
+        if scale is not None:
+            return conv_epilogue(_conv(x, w, None, stride, policy),
+                                 scale, b)
+        return _conv(x, w, b, stride, policy)
+
+    batch_spec = _validate(x, w, mesh, mode, model_axis, data_axis)
 
     if mode == ChannelParallelism.OUTPUT:
         # shard M on model; replicate x over model; concat along M implicit.
-        def local(xl, wl, bl):
-            return _conv(xl, wl, bl, stride)
+        # bias/scale shard with their output channels — per-shard epilogue.
+        in_specs, args, unpack = _operands(
+            x, w, b, scale, P(batch_spec, None, None, None),
+            P(model_axis, None, None, None), P(model_axis))
+
+        def local(xl, wl, *rest):
+            bl, sl = unpack(rest)
+            if sl is not None:
+                return conv_epilogue(_conv(xl, wl, None, stride, policy),
+                                     sl, bl)
+            return _conv(xl, wl, bl, stride, policy)
 
         return shard_map(
-            local, mesh=mesh,
-            in_specs=(P(batch_spec, None, None, None),
-                      P(model_axis, None, None, None),
-                      P(model_axis)),
+            local, mesh=mesh, in_specs=in_specs,
             out_specs=P(batch_spec, model_axis, None, None),
-        )(x, w, jnp.zeros(w.shape[0], x.dtype) if b is None else b)
+            check_vma=False)(*args)
 
     if mode == ChannelParallelism.INPUT:
         # shard N on model; each device computes partial O over its channel
-        # slice; one psum combines (paper Fig. 3); bias added post-psum once.
-        def local(xl, wl, bl):
-            part = _conv(xl, wl, None, stride)
-            part = jax.lax.psum(part, model_axis)
-            return part + bl[None, :, None, None].astype(part.dtype)
+        # slice; one psum combines (paper Fig. 3); requant scale and bias
+        # join once, post-psum, when the accumulation is complete.
+        in_specs, args, unpack = _operands(
+            x, w, b, scale, P(batch_spec, model_axis, None, None),
+            P(None, model_axis, None, None), P(None))
+
+        def local(xl, wl, *rest):
+            bl, sl = unpack(rest)
+            part = _conv(xl, wl, None, stride, policy)
+            return conv_epilogue(jax.lax.psum(part, model_axis), sl, bl)
 
         return shard_map(
-            local, mesh=mesh,
-            in_specs=(P(batch_spec, model_axis, None, None),
-                      P(None, model_axis, None, None),
-                      P(None)),
+            local, mesh=mesh, in_specs=in_specs,
             out_specs=P(batch_spec, None, None, None),
-        )(x, w, jnp.zeros(w.shape[0], x.dtype) if b is None else b)
+            check_vma=False)(*args)
+
+    raise ValueError(f"unknown mode {mode}")
+
+
+def fused_conv_block_channel_parallel(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None,
+    *,
+    mesh: Mesh,
+    mode: ChannelParallelism,
+    stride: tuple[int, int] = (1, 1),
+    odd: str = "raise",
+    scale: jax.Array | None = None,
+    model_axis: str = "model",
+    data_axis: str | None = "data",
+    policy=None,
+) -> jax.Array:
+    """The fused conv+requant+bias+relu+pool stage, channel-parallel.
+
+    x: (B, N, H, W), w: (M, N, Kh, Kw) -> (B, M, Ho/2, Wo/2).
+
+    OUTPUT mode runs the whole fused stage per M-shard (each device owns
+    its output channels end to end — on TPU that is the fused_cwp kernel
+    per shard). INPUT mode cannot: relu/pool do not commute with the sum
+    over input channels, so the per-device conv produces *partials*, the
+    Eq. 7 psum completes the accumulation, and the epilogue
+    (requant scale → bias → relu → 2×2/2 pool) runs on the combined
+    result — replicated over ``model``, which costs nothing measurable
+    (the epilogue is elementwise on the already-reduced tile).
+    """
+    from repro.ops.registry import dispatch
+    stride = tuple(stride)
+    if mode == ChannelParallelism.NONE:
+        return dispatch("fused_conv_block", x, w, b, stride=stride, odd=odd,
+                        scale=scale, policy=policy)
+
+    batch_spec = _validate(x, w, mesh, mode, model_axis, data_axis)
+
+    if mode == ChannelParallelism.OUTPUT:
+        in_specs, args, unpack = _operands(
+            x, w, b, scale, P(batch_spec, None, None, None),
+            P(model_axis, None, None, None), P(model_axis))
+
+        def local(xl, wl, *rest):
+            bl, sl = unpack(rest)
+            return dispatch("fused_conv_block", xl, wl, bl, stride=stride,
+                            odd=odd, scale=sl, policy=policy)
+
+        return shard_map(
+            local, mesh=mesh, in_specs=in_specs,
+            out_specs=P(batch_spec, model_axis, None, None),
+            check_vma=False)(*args)
+
+    if mode == ChannelParallelism.INPUT:
+        in_specs, args, unpack = _operands(
+            x, w, b, scale, P(batch_spec, model_axis, None, None),
+            P(None, model_axis, None, None), P(None))
+
+        def local(xl, wl, *rest):
+            bl, sl = unpack(rest)
+            part = _conv(xl, wl, None, stride, policy)
+            full = jax.lax.psum(part, model_axis)      # Eq. 7: ONE all-reduce
+            return maxpool2(jax.nn.relu(conv_epilogue(full, sl, bl)),
+                            odd=odd)
+
+        return shard_map(
+            local, mesh=mesh, in_specs=in_specs,
+            out_specs=P(batch_spec, None, None, None),
+            check_vma=False)(*args)
 
     raise ValueError(f"unknown mode {mode}")

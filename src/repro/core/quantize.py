@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["QFormat", "QTensor", "quantize_int8", "dequantize_int8",
-           "fake_quant_int8", "quantize_tree"]
+           "fake_quant_int8", "quantize_tree", "requant_epilogue",
+           "conv_epilogue"]
 
 
 @dataclass(frozen=True)
@@ -121,6 +122,45 @@ def fake_quant_int8(x: jax.Array, axis: int | None = -1) -> jax.Array:
 
     _fq.defvjp(_fwd, _bwd)
     return _fq(x)
+
+
+def requant_epilogue(acc: jax.Array, scale: jax.Array,
+                     b: jax.Array | None = None) -> jax.Array:
+    """Dequantize an integer conv accumulator: ``acc·scale [+ b]``.
+
+    ``scale``/``b`` must be pre-broadcast to ``acc``'s layout by the
+    caller. The optimization barrier between the multiply and the add
+    pins the arithmetic to mul-round-then-add-round: without it XLA may
+    contract the pair into a single-rounding FMA inside a fused kernel
+    but not in the eager chain, and the fused-vs-unfused bitwise parity
+    the registry guarantees (DESIGN.md §8) would silently hold only
+    per-compilation. One elementwise op on an accumulator tile — the
+    barrier costs nothing measurable.
+    """
+    out = acc * scale
+    if b is None:
+        return out
+    if hasattr(jax.lax, "optimization_barrier"):
+        out = jax.lax.optimization_barrier(out)
+    return out + b
+
+
+def conv_epilogue(out: jax.Array, scale: jax.Array | None,
+                  b: jax.Array | None = None) -> jax.Array:
+    """``requant_epilogue`` broadcast for NCHW conv outputs: ``scale``
+    (M,)|None per output channel, then bias (M,)|None cast to the output
+    dtype. This is THE post-reduction arithmetic — every consumer
+    (``repro.ops`` conv2d / fused xla backend, the fused ref oracle, the
+    channel-parallel schedules) must call it rather than re-spelling the
+    broadcasts, or the fused-vs-unfused and sharded-vs-unsharded bitwise
+    parity guarantees silently decay into per-call-site conventions."""
+    if scale is not None:
+        return requant_epilogue(
+            out, scale[None, :, None, None],
+            None if b is None else b[None, :, None, None].astype(out.dtype))
+    if b is not None:
+        out = out + b[None, :, None, None].astype(out.dtype)
+    return out
 
 
 def quantize_tree(params, axis: int | None = -1, min_size: int = 16):

@@ -20,18 +20,19 @@ Layout:
 from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
                             FusedConvBlockNode, Graph, InputNode,
                             MaxPool2Node, Node, ParamRef, QuantizeNode,
-                            ReluNode, TensorSpec)
+                            ReluNode, ShardingSpec, TensorSpec)
 from repro.graph.trace import GraphBuilder, TracedArray, param_refs, trace
 from repro.graph.passes import (default_passes, eliminate_dead_quantize,
-                                fuse_conv_blocks, lower_quant)
+                                fuse_conv_blocks, lower_quant,
+                                place_channel_parallel)
 from repro.graph.plan import BoundPlan, ExecutionPlan, compile_model
 
 __all__ = [
-    "TensorSpec", "ParamRef", "Node", "InputNode", "Conv2DNode", "ReluNode",
-    "MaxPool2Node", "FlattenNode", "DenseNode", "QuantizeNode",
-    "FusedConvBlockNode", "Graph",
+    "TensorSpec", "ParamRef", "ShardingSpec", "Node", "InputNode",
+    "Conv2DNode", "ReluNode", "MaxPool2Node", "FlattenNode", "DenseNode",
+    "QuantizeNode", "FusedConvBlockNode", "Graph",
     "GraphBuilder", "TracedArray", "param_refs", "trace",
     "default_passes", "eliminate_dead_quantize", "fuse_conv_blocks",
-    "lower_quant",
+    "lower_quant", "place_channel_parallel",
     "BoundPlan", "ExecutionPlan", "compile_model",
 ]

@@ -28,9 +28,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Iterator
 
-__all__ = ["TensorSpec", "ParamRef", "Node", "InputNode", "Conv2DNode",
-           "ReluNode", "MaxPool2Node", "FlattenNode", "DenseNode",
-           "QuantizeNode", "FusedConvBlockNode", "Graph"]
+__all__ = ["TensorSpec", "ParamRef", "ShardingSpec", "Node", "InputNode",
+           "Conv2DNode", "ReluNode", "MaxPool2Node", "FlattenNode",
+           "DenseNode", "QuantizeNode", "FusedConvBlockNode", "Graph"]
 
 
 @dataclass(frozen=True)
@@ -60,6 +60,38 @@ class ParamRef:
 
     def __str__(self) -> str:
         return "/".join(self.path)
+
+
+@dataclass(frozen=True)
+class ShardingSpec:
+    """Placement of one conv stage on a device mesh (DESIGN.md §9).
+
+    ``mode`` is the paper's §III.A channel-parallelism choice, in
+    ``ChannelParallelism`` value spelling:
+
+      * ``"output"`` — Eq. 6 / OCP: weights (and bias/requant scale)
+        sharded on M over the ``model`` axis, no collective;
+      * ``"input"``  — Eq. 7 / ICP: input channels sharded on N, one
+        psum combines the per-device partial accumulations;
+      * ``"none"``   — replicated compute (data parallelism only).
+
+    ``data`` opts the stage's batch dim into sharding over the ``data``
+    axis (composes orthogonally with either channel mode). Set by the
+    ``place_channel_parallel`` pass; ``None`` on a node means the graph
+    was never placed and the stage executes single-device.
+    """
+
+    mode: str = "none"
+    data: bool = True
+
+    def __post_init__(self):
+        if self.mode not in ("none", "input", "output"):
+            raise ValueError(f"unknown sharding mode {self.mode!r}; "
+                             "expected none|input|output")
+
+    def __str__(self) -> str:
+        return {"input": "icp", "output": "ocp"}[self.mode] \
+            if self.mode != "none" else "none"
 
 
 @dataclass(frozen=True)
@@ -99,11 +131,13 @@ class Conv2DNode(Node):
     w: ParamRef = None
     b: ParamRef | None = None
     stride: tuple[int, int] = (1, 1)
+    sharding: ShardingSpec | None = None
 
     def describe(self) -> str:
+        shard = "" if self.sharding is None else f" shard={self.sharding}"
         return (f"w={self.w} k={self.w.shape[2]}x{self.w.shape[3]} "
                 f"s={self.stride[0]}x{self.stride[1]}"
-                + ("" if self.b is None else f" b={self.b}"))
+                + ("" if self.b is None else f" b={self.b}") + shard)
 
 
 @dataclass(frozen=True)
@@ -182,10 +216,13 @@ class FusedConvBlockNode(Node):
     b: ParamRef | None = None
     stride: tuple[int, int] = (1, 1)
     odd: str = "raise"
+    sharding: ShardingSpec | None = None
 
     def describe(self) -> str:
+        shard = "" if self.sharding is None else f" shard={self.sharding}"
         return (f"w={self.w} k={self.w.shape[2]}x{self.w.shape[3]} "
-                f"s={self.stride[0]}x{self.stride[1]} odd={self.odd}")
+                f"s={self.stride[0]}x{self.stride[1]} odd={self.odd}"
+                + shard)
 
 
 @dataclass(frozen=True)

@@ -25,9 +25,15 @@ deep pipeline (DESIGN.md §8):
      is dead and is removed. This is why the fused pipeline quantizes once
      per block instead of twice per layer boundary.
 
+  4. ``place_channel_parallel`` (mesh compiles only, DESIGN.md §9) —
+     stamps the paper's §III.A parallelism choice on every conv stage as
+     a ``ShardingSpec``: OCP (Eq. 6) when M ≥ N·mesh, ICP (Eq. 7)
+     otherwise, divisibility-aware, overridable through
+     ``ExecPolicy.channel_parallel``.
+
 Every pass is ``Graph -> Graph`` and re-validates; numerics after the full
 pipeline match the eager model exactly (bitwise per backend) — pinned by
-``tests/test_graph.py``.
+``tests/test_graph.py`` (and, for placed graphs, ``tests/test_shard_plan``).
 """
 from __future__ import annotations
 
@@ -36,10 +42,10 @@ from dataclasses import replace
 from repro.core.quantize import QFormat
 from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
                             FusedConvBlockNode, Graph, MaxPool2Node, Node,
-                            QuantizeNode, ReluNode, TensorSpec)
+                            QuantizeNode, ReluNode, ShardingSpec, TensorSpec)
 
 __all__ = ["fuse_conv_blocks", "lower_quant", "eliminate_dead_quantize",
-           "default_passes"]
+           "place_channel_parallel", "default_passes"]
 
 
 def _single_consumer(graph: Graph, nid: int) -> Node | None:
@@ -170,6 +176,69 @@ def eliminate_dead_quantize(graph: Graph) -> Graph:
                 changed = True
                 break
     return graph.validate()
+
+
+def _pick_mode(m: int, n: int, model_size: int) -> str:
+    """The paper-§III.A placement rule, made divisibility-aware.
+
+    Prefer OCP (Eq. 6, no collective) when the output channels are wide
+    enough to keep every device busy — M ≥ N·mesh — otherwise ICP (Eq. 7,
+    one psum) exploits the input-channel width. A schedule whose sharded
+    dim does not divide the mesh falls through to the other; if neither
+    divides, the stage stays replicated ("none") — auto-placement never
+    produces an invalid plan.
+    """
+    prefer = ("output", "input") if m >= n * model_size else \
+        ("input", "output")
+    for mode in prefer:
+        dim = m if mode == "output" else n
+        if dim % model_size == 0:
+            return mode
+    return "none"
+
+
+def place_channel_parallel(graph: Graph, model_size: int, *,
+                           override: str | None = None,
+                           data: bool = True) -> Graph:
+    """Attach a ``ShardingSpec`` to every conv / fused-conv stage.
+
+    ``model_size`` is the mesh's ``model``-axis extent. ``override``
+    (ExecPolicy.channel_parallel: "input" | "output" | "none") forces one
+    schedule; a stage whose channels the forced schedule cannot shard
+    (e.g. ICP on a 1-channel input layer) stays **replicated** — never
+    silently the other schedule — with the decision visible in
+    ``plan.pretty()`` / ``num_sharded()``. An override that applies to
+    *no* stage raises (asking a whole network for an impossible schedule
+    is a configuration bug, like an ExecPolicy backend no op registers).
+    ``data`` opts the batch dim into ``data``-axis sharding (orthogonal
+    to the mode).
+    """
+    placed: list[Node] = []
+    forced_hits = 0
+    conv_stages = 0
+    for node in graph:
+        if not isinstance(node, (Conv2DNode, FusedConvBlockNode)):
+            placed.append(node)
+            continue
+        conv_stages += 1
+        m, n = node.w.shape[0], node.w.shape[1]
+        if override is None:
+            mode = _pick_mode(m, n, model_size)
+        else:
+            dim = m if override == "output" else n
+            mode = override if (override == "none"
+                                or dim % model_size == 0) else "none"
+            forced_hits += mode == override != "none"
+        placed.append(replace(node, sharding=ShardingSpec(mode=mode,
+                                                          data=data)))
+    if override not in (None, "none") and conv_stages and not forced_hits:
+        raise ValueError(
+            f"channel_parallel={override!r} applies to none of the "
+            f"{conv_stages} conv stages: no layer's "
+            f"{'M' if override == 'output' else 'N'} divides the model "
+            f"axis ({model_size} devices); use divisible channel counts "
+            f"or drop the override for per-layer auto-placement")
+    return replace(graph, nodes=tuple(placed)).validate()
 
 
 def default_passes(graph: Graph, quant: str = "none",

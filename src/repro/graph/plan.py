@@ -20,6 +20,15 @@ analogue of the paper's synthesized accelerator:
 ``plan.bind(params)`` folds the constant (weight) quantize nodes once and
 returns a ``BoundPlan`` — per-batch calls then skip weight requantization
 entirely, the scale constant-folding of DESIGN.md §8.
+
+Compiling with ``mesh=`` makes the plan **sharded** (DESIGN.md §9): the
+placement pass stamps a ``ShardingSpec`` on every conv stage (ICP vs OCP
+per layer, paper §III.A), execution routes those stages through the
+explicit-collective schedules in ``core.parallelism``, and ``bind``
+additionally ``device_put``s every stage's weight operands under their
+placement — OCP weights land M-sharded, ICP weights N-sharded — so the
+per-batch call starts from resident shards, the way a bitstream's weight
+ROMs are flashed per compute unit before traffic arrives.
 """
 from __future__ import annotations
 
@@ -27,13 +36,14 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.quantize import QFormat, quantize_int8
+from repro.core.quantize import QFormat, QTensor, quantize_int8
 from repro.core.window import maxpool2
 from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
                             FusedConvBlockNode, Graph, InputNode,
                             MaxPool2Node, QuantizeNode, ReluNode)
-from repro.graph.passes import default_passes
+from repro.graph.passes import default_passes, place_channel_parallel
 from repro.graph.trace import trace
 from repro.ops.policy import ExecPolicy, current_policy
 
@@ -41,27 +51,33 @@ __all__ = ["ExecutionPlan", "BoundPlan", "compile_model"]
 
 
 def _apply_quantize(node: QuantizeNode, val, q: QFormat):
+    """int8 kinds produce QTensors (codes + scale), NOT fake-quant floats:
+    the conv entry points contract the codes and apply sx·sw as a
+    per-output-channel requant epilogue (inside the fused kernel's
+    pipeline), so the dequant multiply never touches the full operand
+    tensors — the weight half of it is constant-folded by ``bind``."""
     if node.kind == "qformat":
         return q.quantize(val)
     if node.kind == "int8_act":
-        t = quantize_int8(val, axis=None)
-        return t.codes.astype(jnp.float32) * t.scale
+        return quantize_int8(val, axis=None)
     if node.kind == "int8_conv_weight":
         m = val.shape[0]
         t = quantize_int8(val.reshape(m, -1), axis=-1)
-        return (t.codes.astype(jnp.float32) * t.scale).reshape(val.shape)
+        return QTensor(t.codes.reshape(val.shape), t.scale.reshape(-1))
     raise ValueError(f"unknown quantize kind {node.kind!r}")
 
 
 @dataclass(frozen=True)
 class ExecutionPlan:
-    """A compiled graph + its baked quantization, executable as
+    """A compiled graph + its baked quantization (and, when compiled with
+    ``mesh=``, its channel-parallel placement), executable as
     ``plan(params, images)``."""
 
     graph: Graph
     quant: str = "none"
     qformat: QFormat = field(default_factory=QFormat)
     compile_policy: ExecPolicy | None = None
+    mesh: Mesh | None = None
 
     # ---------- policy resolution ----------
     def _base_policy(self, policy: ExecPolicy | None) -> ExecPolicy:
@@ -82,20 +98,53 @@ class ExecutionPlan:
 
     # ---------- execution ----------
     def __call__(self, params, x, *, policy: ExecPolicy | None = None,
-                 _folded: dict | None = None):
+                 _folded: dict | None = None, _placed: dict | None = None):
         from repro.ops import conv2d, dense, fused_conv_block
         base = self._base_policy(policy)
         dense_pol = base.with_options(quant=self.quant, qformat=self.qformat)
         env: dict[int, jax.Array] = {}
         folded = _folded or {}
+        placed = _placed or {}
 
         def _weight(node, idx, attr):
-            """Weight operand: lowered graphs route it through a quantize
-            node (possibly pre-folded); unlowered ones read the ParamRef."""
+            """Weight operand: pre-placed by a mesh-aware ``bind`` when
+            available; else through the lowered graph's quantize node
+            (possibly pre-folded); else read from the ParamRef."""
+            if (node.id, attr) in placed:
+                return placed[(node.id, attr)]
             if len(node.inputs) > idx:
                 return env[node.inputs[idx]]
             ref = getattr(node, attr)
             return None if ref is None else ref.fetch(params)
+
+        def _conv_stage(node, fused: bool):
+            xin = env[node.inputs[0]]
+            wv = _weight(node, 1, "w")
+            bv = _weight(node, 2, "b")
+            spec = node.sharding
+            if self.mesh is None or spec is None or spec.mode == "none":
+                # single-device (or pure-data-parallel: XLA propagates the
+                # caller's batch sharding through elementwise stages)
+                if fused:
+                    return fused_conv_block(xin, wv, bv, stride=node.stride,
+                                            odd=node.odd, policy=base)
+                return conv2d(xin, wv, bv, stride=node.stride, policy=base)
+            from repro.core.parallelism import (
+                ChannelParallelism, conv2d_channel_parallel,
+                fused_conv_block_channel_parallel)
+            from repro.ops.impls import split_requant
+            x_arr, w_arr, scale = split_requant(xin, wv)
+            mode = ChannelParallelism(spec.mode)
+            daxis = "data" if spec.data else None
+            if fused:
+                return fused_conv_block_channel_parallel(
+                    x_arr, w_arr, bv, mesh=self.mesh, mode=mode,
+                    stride=node.stride, odd=node.odd, scale=scale,
+                    data_axis=daxis, policy=base)
+            return conv2d_channel_parallel(
+                x_arr, w_arr, bv, mesh=self.mesh, mode=mode,
+                stride=node.stride, scale=scale, data_axis=daxis,
+                policy=base)
 
         for node in self.graph:
             if isinstance(node, InputNode):
@@ -107,21 +156,15 @@ class ExecutionPlan:
                 val = (node.ref.fetch(params) if node.constant
                        else env[node.inputs[0]])
                 env[node.id] = _apply_quantize(node, val, self.qformat)
-            elif isinstance(node, Conv2DNode):
-                env[node.id] = conv2d(
-                    env[node.inputs[0]], _weight(node, 1, "w"),
-                    _weight(node, 2, "b"), stride=node.stride, policy=base)
-            elif isinstance(node, FusedConvBlockNode):
-                env[node.id] = fused_conv_block(
-                    env[node.inputs[0]], _weight(node, 1, "w"),
-                    _weight(node, 2, "b"), stride=node.stride,
-                    odd=node.odd, policy=base)
+            elif isinstance(node, (Conv2DNode, FusedConvBlockNode)):
+                env[node.id] = _conv_stage(
+                    node, isinstance(node, FusedConvBlockNode))
             elif isinstance(node, ReluNode):
                 env[node.id] = jax.nn.relu(env[node.inputs[0]])
             elif isinstance(node, MaxPool2Node):
                 env[node.id] = maxpool2(env[node.inputs[0]], odd=node.odd)
             elif isinstance(node, FlattenNode):
-                v = env[node.inputs[0]]
+                v = self._gather(env[node.inputs[0]])
                 env[node.id] = v.reshape(v.shape[0], -1)
             elif isinstance(node, DenseNode):
                 wq = folded.get(node.id)
@@ -141,14 +184,64 @@ class ExecutionPlan:
                 raise TypeError(f"no executor for node {node.pretty()}")
         return env[self.graph.output_id]
 
-    # ---------- constant folding ----------
+    def _gather(self, v):
+        """Collect a (possibly channel-sharded) activation at the conv→fc
+        boundary: replicated over ``model``, batch kept on ``data``. This
+        is the paper's accelerator DMA-ing the final feature map out of
+        the conv pipeline — and it pins the dense tail to the exact same
+        (replicated) program the unsharded plan runs, so a sharded plan
+        stays bitwise-comparable end to end."""
+        if self.mesh is None:
+            return v
+        batch = "data" if "data" in self.mesh.axis_names else None
+        sh = NamedSharding(self.mesh, P(batch, *[None] * (v.ndim - 1)))
+        if isinstance(v, jax.core.Tracer):
+            return jax.lax.with_sharding_constraint(v, sh)
+        return jax.device_put(v, sh)
+
+    # ---------- constant folding + placement ----------
+    def _shard_weight(self, node, folded: dict, placed: dict,
+                      params) -> None:
+        """Pin one sharded conv stage's weight-side operands to their mesh
+        placement (the one-time flash of the per-unit weight ROMs):
+        OCP shards w/b (and the int8 weight scale) on M over ``model``,
+        ICP shards w on N and replicates b. Lowered (quantized) operands
+        are placed in-place in ``folded``; unlowered ones go to ``placed``
+        keyed by (node id, attr)."""
+        spec = node.sharding
+        if spec is None or spec.mode == "none":
+            return
+        ocp = spec.mode == "output"
+        wspec = P("model", None, None, None) if ocp \
+            else P(None, "model", None, None)
+        vspec = P("model") if ocp else P(None)
+
+        def put(val, part):
+            sh = NamedSharding(self.mesh, part)
+            if isinstance(val, QTensor):      # int8: codes + per-M scales
+                return jax.device_put(val, QTensor(
+                    sh, NamedSharding(self.mesh, vspec)))
+            return jax.device_put(val, sh)
+
+        if len(node.inputs) > 1:              # quantize-lowered weight
+            folded[node.inputs[1]] = put(folded[node.inputs[1]], wspec)
+        else:
+            placed[(node.id, "w")] = put(node.w.fetch(params), wspec)
+        if len(node.inputs) > 2:              # qformat-lowered bias
+            folded[node.inputs[2]] = put(folded[node.inputs[2]], vspec)
+        elif node.b is not None:
+            placed[(node.id, "b")] = put(node.b.fetch(params), vspec)
+
     def bind(self, params, *, policy: ExecPolicy | None = None
              ) -> "BoundPlan":
         """Fold weight quantization against ``params`` now: every
         constant QuantizeNode (conv weights/biases), plus — under int8 —
         each dense layer's per-output-channel QTensor, so per-batch calls
         skip weight requantization entirely (only the per-token activation
-        scales stay dynamic)."""
+        scales stay dynamic). On a mesh-compiled plan the folded/fetched
+        conv weights are additionally ``device_put`` under their
+        ShardingSpec, so binding is a one-time placement and per-batch
+        calls start from resident shards."""
         folded = {
             node.id: _apply_quantize(node, node.ref.fetch(params),
                                      self.qformat)
@@ -159,8 +252,13 @@ class ExecutionPlan:
                 if isinstance(node, DenseNode):
                     folded[node.id] = quantize_int8(node.w.fetch(params),
                                                     axis=0)
+        placed: dict = {}
+        if self.mesh is not None:
+            for node in self.graph:
+                if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
+                    self._shard_weight(node, folded, placed, params)
         return BoundPlan(plan=self, params=params, folded=folded,
-                         policy=policy)
+                         policy=policy, placed=placed)
 
     # ---------- introspection ----------
     def stages(self) -> list[str]:
@@ -169,30 +267,39 @@ class ExecutionPlan:
     def num_fused(self) -> int:
         return sum(isinstance(n, FusedConvBlockNode) for n in self.graph)
 
+    def num_sharded(self) -> int:
+        return sum(getattr(n, "sharding", None) is not None
+                   and n.sharding.mode != "none" for n in self.graph)
+
     def pretty(self) -> str:
+        mesh = "" if self.mesh is None else \
+            f", mesh={dict(self.mesh.shape)}"
         head = (f"ExecutionPlan(quant={self.quant}, "
-                f"{len(self.graph)} nodes, {self.num_fused()} fused)")
+                f"{len(self.graph)} nodes, {self.num_fused()} fused{mesh})")
         return head + "\n" + self.graph.pretty()
 
 
 @dataclass(frozen=True)
 class BoundPlan:
     """An ExecutionPlan closed over one params pytree with weight
-    quantization pre-folded — call as ``bound(images)``."""
+    quantization pre-folded (and, on a mesh plan, weights pre-sharded) —
+    call as ``bound(images)``."""
 
     plan: ExecutionPlan
     params: object
     folded: dict
     policy: ExecPolicy | None = None
+    placed: dict = field(default_factory=dict)
 
     def __call__(self, x, *, policy: ExecPolicy | None = None):
         return self.plan(self.params, x,
                          policy=policy if policy is not None else self.policy,
-                         _folded=self.folded)
+                         _folded=self.folded, _placed=self.placed)
 
 
 def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
                   policy: ExecPolicy | None = None, fuse: bool = True,
+                  mesh: Mesh | None = None,
                   dtype: str = "float32") -> ExecutionPlan:
     """trace → passes → plan for any model whose forward routes through
     the hooked functional layer (DESIGN.md §8).
@@ -200,6 +307,11 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
     The quantization mode is resolved now (explicit ``policy`` >
     model-config policy > ambient ``use_policy``) and baked into the
     plan; backend/interpret/tiling stay dynamic through the registry.
+
+    ``mesh`` (with a ``model`` axis, optionally a ``data`` axis) runs the
+    channel-parallel placement pass (DESIGN.md §9) and bakes the mesh into
+    the plan: ICP vs OCP per conv stage from channel counts, overridable
+    via ``ExecPolicy.channel_parallel``.
     """
     if input_shape is None:
         input_shape = model.input_shape()
@@ -212,5 +324,16 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
     graph = trace(model, tuple(input_shape), dtype)
     graph = default_passes(graph, quant=quant_pol.quant,
                            qformat=quant_pol.qformat, fuse=fuse)
+    if mesh is not None:
+        if "model" not in mesh.axis_names:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has no 'model' axis; channel "
+                f"parallelism (paper §III.A) shards over 'model' and "
+                f"batches over 'data'")
+        graph = place_channel_parallel(
+            graph, mesh.shape["model"],
+            override=quant_pol.channel_parallel,
+            data="data" in mesh.axis_names)
     return ExecutionPlan(graph=graph, quant=quant_pol.quant,
-                         qformat=quant_pol.qformat, compile_policy=pol)
+                         qformat=quant_pol.qformat, compile_policy=pol,
+                         mesh=mesh)

@@ -33,16 +33,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.quantize import requant_epilogue
 
-def _fused_cwp_kernel(x_ref, w_ref, b_ref, o_ref, *,
+
+def _fused_cwp_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, *,
                       kh: int, kw: int, stride: tuple[int, int],
                       pb: int, wo: int, n: int):
-    """One grid step: slab -> windows -> MXU -> +bias -> relu -> pool.
+    """One grid step: slab -> windows -> MXU -> ×scale -> +bias -> relu
+    -> pool.
 
     x_ref: (N, rows_in, W)  input slab, rows_in = (2·pb−1)·sh + kh
     w_ref: (N·Kh·Kw, MB)    flat weight tile (feature order N, Kh, Kw)
+    s_ref: (1, MB)          requant scale tile (1.0 when not quantized —
+                            an exact no-op multiply on the accumulator)
     b_ref: (1, MB)          bias tile
     o_ref: (MB, PB, Wo/2)   pooled output tile
+
+    The scale is the int8 requant epilogue: operands arrive as integer
+    codes, the MXU contraction accumulates them exactly, and sx·sw[m]
+    dequantizes the (MB, RB·Wo) accumulator tile in VREGs — the big code
+    tensors are never dequantized in HBM.
     """
     sh, sw = stride
     rb = 2 * pb                             # conv rows per pooled block
@@ -67,17 +77,19 @@ def _fused_cwp_kernel(x_ref, w_ref, b_ref, o_ref, *,
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )                                       # (MB, RB*Wo)
-    acc = acc + b_ref[0, :][:, None]
+    acc = requant_epilogue(acc, s_ref[0, :][:, None], b_ref[0, :][:, None])
     # relu + 2×2/2 max pool, entirely in registers: pair rows and columns
     act = jnp.maximum(acc, 0.0).reshape(-1, pb, 2, wo // 2, 2)
     pooled = act.max(axis=(2, 4))           # (MB, PB, Wo/2)
     o_ref[...] = pooled.astype(o_ref.dtype)
 
 
-def fused_cwp_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
+def fused_cwp_pallas(x: jax.Array, wf: jax.Array, s: jax.Array,
+                     b: jax.Array, *,
                      kh: int, kw: int, stride: tuple[int, int],
                      pb: int, mb: int, interpret: bool) -> jax.Array:
-    """Launch. x: (B, N, H, W); wf: (η, M) flat weights; b: (M,).
+    """Launch. x: (B, N, H, W); wf: (η, M) flat weights; s: (1, M) requant
+    scales (ones when unquantized); b: (1, M) bias.
 
     pb: pooled output rows per block; mb: output channels per block.
     Returns (B, M, Po, Wo/2) in x.dtype; requires even Ho/Wo, pb | Po,
@@ -119,8 +131,9 @@ def fused_cwp_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
             slab_spec,
             pl.BlockSpec((eta, mb), lambda bi, pi, mi: (0, mi)),
             pl.BlockSpec((1, mb), lambda bi, pi, mi: (0, mi)),
+            pl.BlockSpec((1, mb), lambda bi, pi, mi: (0, mi)),
         ],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, m, po, wo // 2), x.dtype),
         interpret=interpret,
-    )(x, wf, b)
+    )(x, wf, s, b)

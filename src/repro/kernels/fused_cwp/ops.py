@@ -26,7 +26,8 @@ from repro.ops.tiling import choose_fused_blocks, largest_divisor, tile_params
 
 @functools.partial(jax.jit,
                    static_argnames=("stride", "interpret", "pb", "mb"))
-def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None, *,
+def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None,
+                   scale: jax.Array | None, *,
                    stride: tuple[int, int], interpret: bool,
                    pb: int, mb: int) -> jax.Array:
     bsz, n, h, wdt = x.shape
@@ -45,8 +46,12 @@ def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None, *,
     wf = w.reshape(m, n * kh * kw).T        # (η, M), feature order (N,Kh,Kw)
     bias = jnp.zeros((1, m), x.dtype) if b is None \
         else b.reshape(1, m).astype(x.dtype)
+    # ×1.0 on the accumulator is exact, so the unquantized path is
+    # bit-identical to the pre-epilogue kernel
+    s = jnp.ones((1, m), jnp.float32) if scale is None \
+        else scale.reshape(1, m).astype(jnp.float32)
 
-    out = fused_cwp_pallas(x, wf.astype(x.dtype), bias, kh=kh, kw=kw,
+    out = fused_cwp_pallas(x, wf.astype(x.dtype), s, bias, kh=kh, kw=kw,
                            stride=stride, pb=pb, mb=mb, interpret=interpret)
     return out[:, :, :po, :]
 
@@ -54,12 +59,15 @@ def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None, *,
 def fused_conv_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
                       *, stride: tuple[int, int] = (1, 1),
                       odd: str = "raise",
+                      scale: jax.Array | None = None,
                       interpret: bool | None = None,
                       pb: int | None = None, mb: int | None = None,
                       policy: ExecPolicy | None = None) -> jax.Array:
-    """Fused conv+bias+relu+2×2 pool. x: (B,N,H,W), w: (M,N,Kh,Kw) ->
-    (B,M,Ho/2,Wo/2). Requires even conv output dims (``odd`` modes other
-    than even inputs are served by the ref/xla backends)."""
+    """Fused conv+[requant]+bias+relu+2×2 pool. x: (B,N,H,W), w:
+    (M,N,Kh,Kw) -> (B,M,Ho/2,Wo/2). ``scale`` (M,) is the int8 requant
+    epilogue applied to the accumulator before bias/relu. Requires even
+    conv output dims (``odd`` modes other than even inputs are served by
+    the ref/xla backends)."""
     pol = policy if policy is not None else current_policy()
     if interpret is None:
         interpret = pol.resolve_interpret()
@@ -84,5 +92,6 @@ def fused_conv_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
     # mb must divide M (grid constraint); pb is free — ragged Po is padded
     tiles["mb"] = largest_divisor(m, tiles["mb"])
     tiles["pb"] = max(1, tiles["pb"])
-    return _fused_cwp_jit(x, w, b, stride=tuple(stride), interpret=interpret,
-                          pb=tiles["pb"], mb=tiles["mb"])
+    return _fused_cwp_jit(x, w, b, scale, stride=tuple(stride),
+                          interpret=interpret, pb=tiles["pb"],
+                          mb=tiles["mb"])

@@ -5,12 +5,16 @@
 bias) followed by relu and the 2×2/2 pool. Fusion must be a *scheduling*
 transform, not a numeric one: the ``ref`` backend of the fused family is
 bitwise-identical to the layer-by-layer ref chain by construction, which
-is exactly what the parity suite pins.
+is exactly what the parity suite pins. The optional ``scale`` operand is
+the int8 requant epilogue (per-output-channel ``sx·sw`` applied to the
+accumulator before the bias) — again the unfused chain verbatim, since
+``repro.ops.conv2d`` applies the same epilogue outside its backends.
 """
 from __future__ import annotations
 
 import jax
 
+from repro.core.quantize import conv_epilogue
 from repro.core.window import conv2d_ref, maxpool2
 
 __all__ = ["fused_conv_block_ref"]
@@ -19,8 +23,14 @@ __all__ = ["fused_conv_block_ref"]
 def fused_conv_block_ref(x: jax.Array, w: jax.Array,
                          b: jax.Array | None = None,
                          stride: tuple[int, int] = (1, 1),
-                         odd: str = "raise") -> jax.Array:
-    """x: (B,N,H,W) · w: (M,N,Kh,Kw) -> (B,M,Po,Qo); VALID conv, relu,
-    2×2/2 max pool (odd handling per core.window.maxpool2)."""
-    return maxpool2(jax.nn.relu(conv2d_ref(x, w, b, tuple(stride))),
-                    odd=odd)
+                         odd: str = "raise",
+                         scale: jax.Array | None = None) -> jax.Array:
+    """x: (B,N,H,W) · w: (M,N,Kh,Kw) -> (B,M,Po,Qo); VALID conv,
+    [requant scale], bias, relu, 2×2/2 max pool (odd handling per
+    core.window.maxpool2)."""
+    if scale is None:
+        out = conv2d_ref(x, w, b, tuple(stride))
+    else:
+        out = conv_epilogue(conv2d_ref(x, w, None, tuple(stride)),
+                            scale, b)
+    return maxpool2(jax.nn.relu(out), odd=odd)

@@ -21,15 +21,25 @@ import numpy as np
 
 
 def _serve_vision(spec, model, args) -> None:
-    """Micro-batched image serving through the compiled plan."""
+    """Micro-batched image serving through the compiled plan. An explicit
+    ``--mesh`` (e.g. ``1x2``: data×model) compiles the plan
+    channel-parallel (DESIGN.md §9); ``auto`` keeps the vision path
+    single-device — the CNN is small enough that sharding is an explicit
+    operator choice, not a default."""
+    from repro.launch.train import build_mesh
     from repro.serve.vision import VisionEngine, VisionEngineConfig
 
+    mesh = None if args.mesh == "auto" else build_mesh(args.mesh)
     params = model.init(jax.random.PRNGKey(0))
     engine = VisionEngine(model, params,
-                          VisionEngineConfig(batch=args.capacity))
+                          VisionEngineConfig(batch=args.capacity, mesh=mesh))
     plan = engine.plan
+    sharded = "" if mesh is None else (
+        f", {plan.num_sharded()} sharded stages over "
+        f"mesh={dict(mesh.shape)}")
     print(f"arch={args.arch} vision path: compiled plan with "
-          f"{plan.num_fused()} fused conv blocks, quant={plan.quant}")
+          f"{plan.num_fused()} fused conv blocks, quant={plan.quant}"
+          f"{sharded}")
 
     rng = np.random.RandomState(1)
     shape = model.input_shape()[1:]
@@ -44,7 +54,8 @@ def _serve_vision(spec, model, args) -> None:
     print(f"served {len(results)} images in {wall:.2f}s "
           f"({s.images_per_s:.1f} img/s) over {s.steps} fixed-shape "
           f"batches of {args.capacity}")
-    print(f"lane utilization {s.lane_utilization:.0%}")
+    print(f"lane utilization {s.lane_utilization:.0%} "
+          f"({s.lane_steps} real + {s.pad_lanes} pad lanes)")
     if results:
         sample = results[min(results)]
         print(f"sample prediction (request {min(results)}): "

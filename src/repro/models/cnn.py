@@ -150,15 +150,22 @@ class PaperCNN:
                      policy=cfg.exec_policy())
 
     def compile(self, policy: ExecPolicy | None = None, *,
-                fuse: bool = True, batch: int = 1) -> "ExecutionPlan":
+                fuse: bool = True, batch: int = 1,
+                mesh=None) -> "ExecutionPlan":
         """Lift this model into a fused, static ``ExecutionPlan``
         (repro.graph, DESIGN.md §8): trace → conv+relu+pool fusion →
         quantization lowering → DQE. Quant mode resolves now (``policy``
         > config policy > ambient ``use_policy``); backend selection
-        stays dynamic through the op registry at call time."""
+        stays dynamic through the op registry at call time.
+
+        ``mesh`` (jax.sharding.Mesh with a ``model`` axis) additionally
+        runs the channel-parallel placement pass (DESIGN.md §9): each
+        conv stage gets the paper's ICP or OCP schedule from its channel
+        counts (override via ``ExecPolicy.channel_parallel``) and
+        ``plan.bind`` places the weights shard-resident."""
         from repro.graph.plan import compile_model
         return compile_model(self, self.input_shape(batch), policy=policy,
-                             fuse=fuse)
+                             fuse=fuse, mesh=mesh)
 
     def loss(self, params: dict, batch: dict, ctx=None
              ) -> tuple[jax.Array, dict]:

@@ -22,7 +22,8 @@ from repro.ops.tiling import TUNING_CACHE, TuningCache, tile_params
 from repro.ops.registry import (REGISTRY, BackendUnavailableError, OpRegistry,
                                 dispatch, list_backends, list_ops, register)
 from repro.ops.impls import (causal_conv1d, conv2d, dense, fused_conv_block,
-                             qdense, qmatmul, tree_reduce_sum)
+                             qdense, qmatmul, quantize_conv_int8,
+                             split_requant, tree_reduce_sum)
 from repro.ops.compat import PATH_TO_BACKEND, policy_from_legacy
 
 __all__ = [
@@ -32,6 +33,6 @@ __all__ = [
     "REGISTRY", "BackendUnavailableError", "OpRegistry", "dispatch",
     "list_backends", "list_ops", "register",
     "causal_conv1d", "conv2d", "dense", "fused_conv_block", "qdense",
-    "qmatmul", "tree_reduce_sum",
+    "qmatmul", "quantize_conv_int8", "split_requant", "tree_reduce_sum",
     "PATH_TO_BACKEND", "policy_from_legacy",
 ]

@@ -22,23 +22,26 @@ formulations — exactly the old hardcoded defaults, now derived instead of
 scattered.
 
 Quantization (paper C4) is applied here, once, per ``ExecPolicy.quant``:
-``qformat`` snaps operands and results to the Qm.n lattice; ``int8`` is
-symmetric per-channel weight / per-tensor activation fake-quant for convs
-and the real int8 datapath (``qmatmul``/``qdense``) for dense layers.
+``qformat`` snaps operands and results to the Qm.n lattice; ``int8`` runs
+convs on integer codes with a per-output-channel requant **epilogue**
+(scale × accumulator + bias, after the reduction — inside the fused
+kernel's pipeline for ``fused_conv_block``) and the real int8 datapath
+(``qmatmul``/``qdense``) for dense layers.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantize import QTensor, quantize_int8
+from repro.core.quantize import QTensor, conv_epilogue, quantize_int8
 from repro.core.window import conv2d_im2col, conv2d_ref, maxpool2
 from repro.core.addtree import pairwise_sum
 from repro.ops.policy import ExecPolicy, current_policy
 from repro.ops.registry import dispatch, register
 
 __all__ = ["conv2d", "fused_conv_block", "tree_reduce_sum", "qmatmul",
-           "qdense", "causal_conv1d", "dense"]
+           "qdense", "causal_conv1d", "dense", "quantize_conv_int8",
+           "split_requant"]
 
 
 # ---------------------------------------------------------------- conv2d
@@ -76,16 +79,43 @@ def _conv_quant_operands(pol: ExecPolicy, x, w, b):
         return q.quantize(x), q.quantize(w), \
             (None if b is None else q.quantize(b))
     if pol.quant == "int8":
-        # int8 weights per output channel; activations per-tensor; float
-        # accumulate here (dense layers use the real int8 kernel; conv
-        # dequantizes per output channel).
-        m = w.shape[0]
-        wq = quantize_int8(w.reshape(m, -1), axis=-1)
-        xq = quantize_int8(x, axis=None)
-        return (xq.codes.astype(jnp.float32) * xq.scale,
-                (wq.codes.astype(jnp.float32) * wq.scale).reshape(w.shape),
-                b)
+        # int8 weights per output channel, activations per-tensor — kept as
+        # QTensors so the conv runs on integer codes and the dequant happens
+        # ONCE, per output channel, in the requant epilogue (instead of
+        # dequantizing both full operand tensors up front).
+        return quantize_conv_int8(x, w) + (b,)
     return x, w, b
+
+
+def quantize_conv_int8(x, w) -> tuple[QTensor, QTensor]:
+    """The int8 conv operand quantization: per-tensor activation QTensor +
+    per-output-channel weight QTensor (codes kept in the conv's (M, N, Kh,
+    Kw) layout, scale flattened to (M,)). Shared by the eager entry points
+    here and the graph compiler's quant-lowering pass (repro.graph)."""
+    m = w.shape[0]
+    wq = quantize_int8(w.reshape(m, -1), axis=-1)
+    xq = quantize_int8(x, axis=None)
+    return xq, QTensor(wq.codes.reshape(w.shape), wq.scale.reshape(-1))
+
+
+def split_requant(x, w):
+    """Split int8 QTensor conv operands into (x_codes, w_codes, scale).
+
+    The codes come back as integer-valued float32 arrays (the MXU/VPU
+    contraction over η = N·Kh·Kw int8·int8 products is exact in fp32:
+    |Σ| ≤ η·127² < 2²⁴ for every conv in this repo) and ``scale`` is the
+    per-output-channel requant factor sx·sw with shape (M,), to be applied
+    to the accumulator — *after* the reduction, *before* the bias — by the
+    backend epilogue. Non-QTensor operands pass through with scale None.
+    """
+    if not (isinstance(x, QTensor) or isinstance(w, QTensor)):
+        return x, w, None
+    if not (isinstance(x, QTensor) and isinstance(w, QTensor)):
+        raise TypeError(
+            "int8 conv needs BOTH operands quantized: got "
+            f"x={type(x).__name__}, w={type(w).__name__}")
+    scale = (x.scale * w.scale).reshape(-1).astype(jnp.float32)
+    return (x.codes.astype(jnp.float32), w.codes.astype(jnp.float32), scale)
 
 
 def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
@@ -97,10 +127,19 @@ def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
     ``use_policy`` context). This is the single conv entry point — the
     per-call-site ``path=`` strings it replaces live only in the
     ``core.conv`` deprecation shim.
+
+    Under ``quant="int8"`` (or when called directly with QTensor operands,
+    as the compiled plans do) the backend contracts integer codes and the
+    per-channel requant scale + bias are applied as an epilogue on the
+    small accumulator — the paper's post-accumulate number-format step.
     """
     pol = policy if policy is not None else current_policy()
     x, w, b = _conv_quant_operands(pol, x, w, b)
-    out = dispatch("conv2d", x, w, b, stride=stride, policy=pol)
+    x, w, scale = split_requant(x, w)
+    out = dispatch("conv2d", x, w, None if scale is not None else b,
+                   stride=stride, policy=pol)
+    if scale is not None:
+        out = conv_epilogue(out, scale, b)
     if pol.quant == "qformat":
         out = pol.qformat.quantize(out)
     return out
@@ -109,14 +148,19 @@ def conv2d(x: jax.Array, w: jax.Array, b: jax.Array | None = None, *,
 # ------------------------------------------------------ fused_conv_block
 
 @register("fused_conv_block", "ref", priority=1)
-def _fused_ref(x, w, b=None, *, stride=(1, 1), odd="raise", policy=None):
+def _fused_ref(x, w, b=None, *, stride=(1, 1), odd="raise", scale=None,
+               policy=None):
     from repro.kernels.fused_cwp.ref import fused_conv_block_ref
-    return fused_conv_block_ref(x, w, b, stride, odd)
+    return fused_conv_block_ref(x, w, b, stride, odd, scale=scale)
 
 
 @register("fused_conv_block", "xla", priority=10)
-def _fused_xla(x, w, b=None, *, stride=(1, 1), odd="raise", policy=None):
-    return maxpool2(jax.nn.relu(conv2d_im2col(x, w, b, stride)), odd=odd)
+def _fused_xla(x, w, b=None, *, stride=(1, 1), odd="raise", scale=None,
+               policy=None):
+    out = conv2d_im2col(x, w, None if scale is not None else b, stride)
+    if scale is not None:
+        out = conv_epilogue(out, scale, b)
+    return maxpool2(jax.nn.relu(out), odd=odd)
 
 
 def _fused_pallas_ok(x, w, b=None, *, stride=(1, 1), odd="raise", **_):
@@ -131,9 +175,11 @@ def _fused_pallas_ok(x, w, b=None, *, stride=(1, 1), odd="raise", **_):
 
 @register("fused_conv_block", "pallas", priority={"tpu": 30, "*": 5},
           supports=_fused_pallas_ok)
-def _fused_pallas(x, w, b=None, *, stride=(1, 1), odd="raise", policy=None):
+def _fused_pallas(x, w, b=None, *, stride=(1, 1), odd="raise", scale=None,
+                  policy=None):
     from repro.kernels.fused_cwp.ops import fused_conv_window  # lazy: pallas
-    return fused_conv_window(x, w, b, stride=stride, odd=odd, policy=policy)
+    return fused_conv_window(x, w, b, stride=stride, odd=odd, scale=scale,
+                             policy=policy)
 
 
 def fused_conv_block(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
@@ -147,12 +193,16 @@ def fused_conv_block(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
     Quantization matches ``conv2d`` exactly; under ``qformat`` the output
     snap commutes with relu/max (both monotone and 0-preserving), so
     fused output == eager ``maxpool2(relu(conv2d(...)))`` bit-for-bit per
-    backend.
+    backend. Under ``int8`` (or with QTensor operands) the requant scale
+    rides INTO the backend as the ``scale`` epilogue operand — it must be
+    applied before the in-pipeline bias/relu/pool, so unlike ``conv2d``
+    it cannot be an outer wrapper here.
     """
     pol = policy if policy is not None else current_policy()
     x, w, b = _conv_quant_operands(pol, x, w, b)
+    x, w, scale = split_requant(x, w)
     out = dispatch("fused_conv_block", x, w, b, stride=stride, odd=odd,
-                   policy=pol)
+                   scale=scale, policy=pol)
     if pol.quant == "qformat":
         out = pol.qformat.quantize(out)
     return out

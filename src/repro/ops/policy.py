@@ -15,7 +15,12 @@ carrying
                     interpret only off-TPU (``jax.default_backend()``);
   * ``tiling``    — per-op tile-size overrides (e.g. ``{"rb": 8,
                     "mb": 128}`` or namespaced ``{"conv2d.rb": 8}``),
-                    consulted before the tuning cache and heuristics.
+                    consulted before the tuning cache and heuristics;
+  * ``channel_parallel`` — schedule override for mesh-compiled plans
+                    (paper §III.A via DESIGN.md §9): ``None`` auto-places
+                    ICP/OCP per layer, ``"input"``/``"output"`` (aliases
+                    ``icp``/``ocp``) force one schedule, ``"none"``
+                    disables channel sharding.
 
 Policies nest via ``use_policy`` (a contextvar, so jit-trace-time dispatch
 and threaded engines both see the right one) and are hashable, so configs
@@ -33,10 +38,14 @@ import jax
 from repro.core.quantize import QFormat
 
 __all__ = ["ExecPolicy", "use_policy", "current_policy", "default_interpret",
-           "BACKENDS", "QUANT_MODES"]
+           "BACKENDS", "QUANT_MODES", "CHANNEL_PARALLEL_MODES"]
 
 BACKENDS = ("ref", "xla", "pallas")
 QUANT_MODES = ("none", "qformat", "int8")
+# canonical spellings of the paper's two channel-parallel schedules
+# (§III.A): "output"/"ocp" = Eq. 6 shard-M, "input"/"icp" = Eq. 7 shard-N
+CHANNEL_PARALLEL_MODES = ("none", "input", "output")
+_CHANNEL_PARALLEL_ALIASES = {"icp": "input", "ocp": "output"}
 
 
 def default_interpret() -> bool:
@@ -53,6 +62,12 @@ class ExecPolicy:
     qformat: QFormat = field(default_factory=QFormat)
     interpret: bool | None = None
     tiling: tuple[tuple[str, int], ...] = ()
+    # channel-parallel schedule override for mesh-compiled plans
+    # (repro.graph placement pass): None lets the placement pick ICP vs
+    # OCP per layer from channel counts; "input"/"icp", "output"/"ocp"
+    # force the paper's Eq. 7 / Eq. 6 schedule on every conv stage, and
+    # "none" pins plans to replicated (data-parallel only) execution.
+    channel_parallel: str | None = None
 
     def __post_init__(self):
         if self.backend is not None and self.backend not in BACKENDS:
@@ -61,6 +76,15 @@ class ExecPolicy:
         if self.quant not in QUANT_MODES:
             raise ValueError(f"unknown quant mode {self.quant!r}; "
                              f"expected one of {QUANT_MODES}")
+        if self.channel_parallel is not None:
+            cp = _CHANNEL_PARALLEL_ALIASES.get(self.channel_parallel,
+                                               self.channel_parallel)
+            if cp not in CHANNEL_PARALLEL_MODES:
+                raise ValueError(
+                    f"unknown channel_parallel mode "
+                    f"{self.channel_parallel!r}; expected one of "
+                    f"{CHANNEL_PARALLEL_MODES} (or icp/ocp) or None")
+            object.__setattr__(self, "channel_parallel", cp)
         if isinstance(self.tiling, Mapping):
             object.__setattr__(self, "tiling",
                                tuple(sorted(self.tiling.items())))

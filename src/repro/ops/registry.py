@@ -1,7 +1,8 @@
 """The op registry: named backends per op family, capability-aware dispatch.
 
-Each op family (``conv2d``, ``tree_reduce_sum``, ``qmatmul``,
-``causal_conv1d``) registers named backend implementations with
+Each op family (``conv2d``, ``fused_conv_block``, ``tree_reduce_sum``,
+``qmatmul``, ``causal_conv1d``) registers named backend implementations
+with
 
   * a **platform priority map** — ``{"tpu": 30, "*": 5}`` says "strongly
     preferred on TPU, last resort elsewhere"; auto-selection ranks capable

@@ -11,7 +11,11 @@ without HBM round-trips between conv/relu/pool.
 
 The plan is ``bind``-ed to the params at engine construction: weight
 quantization (int8 scales, Qm.n snapping) is folded once — the serving
-analogue of flashing the bitstream before traffic arrives.
+analogue of flashing the bitstream before traffic arrives. With
+``VisionEngineConfig.mesh`` the plan is additionally compiled
+channel-parallel (ICP/OCP per conv stage, DESIGN.md §9) and the bind
+places each stage's weights shard-resident, so serving traffic runs the
+paper's §III.A parallelism through the same single compiled program.
 """
 from __future__ import annotations
 
@@ -35,13 +39,18 @@ class VisionEngineConfig:
     # then ambient use_policy); set to pin a serving policy explicitly
     policy: ExecPolicy | None = None
     fuse: bool = True                 # compile with conv-block fusion
+    # device mesh for a channel-parallel plan (DESIGN.md §9): compile
+    # with ICP/OCP placement and bind weights shard-resident. None
+    # serves single-device.
+    mesh: object | None = None
 
 
 @dataclass
 class VisionStats:
     steps: int = 0
     images: int = 0                   # real images served
-    lane_steps: int = 0               # batch × steps (work issued)
+    lane_steps: int = 0               # lanes that carried a real image
+    pad_lanes: int = 0                # dead lanes issued as batch padding
     wall_s: float = 0.0
 
     @property
@@ -51,8 +60,12 @@ class VisionStats:
     @property
     def lane_utilization(self) -> float:
         """Fraction of issued lanes that carried a real image (the
-        occupancy argument, per-batch instead of per-slot)."""
-        return self.images / self.lane_steps if self.lane_steps else 0.0
+        occupancy argument, per-batch instead of per-slot). Issued =
+        real + pad: a short final batch still computes its pad lanes,
+        but they must never count as served work — ``lane_steps`` used
+        to include them, inflating throughput/occupancy reports."""
+        issued = self.lane_steps + self.pad_lanes
+        return self.lane_steps / issued if issued else 0.0
 
 
 class VisionEngine:
@@ -68,8 +81,15 @@ class VisionEngine:
                  config: VisionEngineConfig = VisionEngineConfig()):
         self.model = model
         self.config = config
+        mesh = config.mesh
+        if mesh is not None and "data" in mesh.axis_names \
+                and config.batch % mesh.shape["data"]:
+            raise ValueError(
+                f"batch {config.batch} does not divide the mesh's data "
+                f"axis ({mesh.shape['data']} devices); the compiled batch "
+                f"shape is sharded over it — pick a divisible batch")
         self.plan = model.compile(policy=config.policy, fuse=config.fuse,
-                                  batch=config.batch)
+                                  batch=config.batch, mesh=mesh)
         self._bound = self.plan.bind(params)
         self._step = jax.jit(lambda x: self._bound(x))
         self.stats = VisionStats()
@@ -114,7 +134,8 @@ class VisionEngine:
                                  "logits": logits[i]}
         self.stats.steps += 1
         self.stats.images += len(uids)
-        self.stats.lane_steps += b
+        self.stats.lane_steps += len(uids)          # real work only
+        self.stats.pad_lanes += b - len(uids)       # issued, not served
         self.stats.wall_s += time.perf_counter() - t0
         return len(uids)
 
