@@ -1,16 +1,22 @@
-"""Design-space sweep over kernel tile parameters (DESIGN.md §7).
+"""Design-space sweep over kernel tile parameters (DESIGN.md §7, §10).
 
-For each registered Pallas-backed op family this measures a small grid of
-candidate tile sizes per (shape, dtype), reports each point, and writes the
-winner into the repro.ops tuning cache — the software analogue of the FPGA
-design-space exploration step in the accelerator surveys (arXiv:1806.01683
-§"design space"): the datapath is fixed, the *mapping* is tuned offline.
+For each registered Pallas-backed op family this measures a candidate grid
+per (shape, dtype), reports each point, and writes the winner into the
+repro.ops tuning cache — the software analogue of the FPGA design-space
+exploration step in the accelerator surveys (arXiv:1806.01683 §"design
+space"): the datapath is fixed, the *mapping* is tuned offline. The conv
+sweep routes through ``repro.ops.autotune`` (coordinate descent over
+rb/pb × mb × bb — the same search ``ExecutionPlan.bind(autotune)`` runs),
+so the persisted table is exactly what serving consumes.
 
 ``run()`` (benchmarks/run.py) populates the in-process cache and emits CSV.
 Standalone use can persist the result and feed it back to any later run:
 
     PYTHONPATH=src:. python benchmarks/op_sweep.py --out tuning_cache.json
     REPRO_TUNING_CACHE=tuning_cache.json PYTHONPATH=src:. python ...
+
+(or ``--tuning-cache tuning_cache.json`` on ``launch/serve.py`` /
+``benchmarks/run.py``, which also saves back what they measure).
 """
 from __future__ import annotations
 
@@ -22,9 +28,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.kernels.addtree.ops import tree_reduce_sum
-from repro.kernels.conv_window.ops import conv2d_window
 from repro.kernels.qmatmul.ops import qmatmul
 from repro.ops import TUNING_CACHE, ExecPolicy
+from repro.ops.autotune import tune_conv2d, tune_fused_conv_block
 from repro.ops.tiling import largest_divisor
 
 # (B, N, H, W, M, kh, kw, sh, sw) — the paper's two conv layers + a wide one
@@ -33,7 +39,6 @@ CONV_CASES = [
     (8, 15, 13, 13, 20, 6, 6, 1, 1),
     (2, 8, 32, 32, 64, 3, 3, 1, 1),
 ]
-CONV_RB = (1, 2, 4, 8)
 TREE_CASES = [(509, 144), (1024, 37)]          # prime R on purpose
 TREE_RB = (32, 64, 128, 256)
 QMM_CASES = [(128, 256, 128), (96, 144, 80)]   # (M, K, N)
@@ -41,21 +46,37 @@ QMM_BLOCKS = (32, 64, 128)
 
 
 def _sweep_conv() -> None:
+    """Conv + fused-conv candidate search via the measured autotuner
+    (every probed point is emitted; the winner lands in the cache)."""
     for case in CONV_CASES:
         b, n, h, w, m, kh, kw, sh, sw = case
         x = jax.random.normal(jax.random.PRNGKey(0), (b, n, h, w))
         wt = jax.random.normal(jax.random.PRNGKey(1), (m, n, kh, kw))
-        best, best_us = None, float("inf")
-        for rb in CONV_RB:
-            fn = functools.partial(conv2d_window, stride=(sh, sw), rb=rb)
-            us = time_fn(fn, x, wt)
-            emit(f"op_sweep/conv2d/{'x'.join(map(str, case))}/rb{rb}", us)
-            if us < best_us:
-                best, best_us = {"rb": rb}, us
-        sig = (n, h, w, m, kh, kw, sh, sw)
-        TUNING_CACHE.put("conv2d", sig, x.dtype, best)
-        emit(f"op_sweep/conv2d/{'x'.join(map(str, case))}/best", best_us,
-             f"rb={best['rb']}")
+        tag = "x".join(map(str, case))
+
+        def point(op, probes):
+            def on_point(tiles, us):
+                lbl = "_".join(f"{k}{v}" for k, v in sorted(tiles.items()))
+                probes[tuple(sorted(tiles.items()))] = us
+                emit(f"op_sweep/{op}/{tag}/{lbl}", us)
+            return on_point
+
+        def best_row(op, best, probes):
+            emit(f"op_sweep/{op}/{tag}/best",
+                 probes[tuple(sorted(best.items()))],
+                 ";".join(f"{k}={v}" for k, v in sorted(best.items())))
+
+        probes: dict = {}
+        best = tune_conv2d(x, wt, stride=(sh, sw),
+                           on_point=point("conv2d", probes))
+        best_row("conv2d", best, probes)
+        ho, wo = (h - kh) // sh + 1, (w - kw) // sw + 1
+        if ho % 2 == 0 and wo % 2 == 0:     # fused kernel: even dims only
+            probes = {}
+            best = tune_fused_conv_block(
+                x, wt, stride=(sh, sw),
+                on_point=point("fused_conv_block", probes))
+            best_row("fused_conv_block", best, probes)
 
 
 def _sweep_tree() -> None:

@@ -9,6 +9,12 @@ almost free) while mean occupancy tracks capacity until the workload can
 no longer keep every slot busy.
 
 Rows: ``serve_tput/cap{C},<us per engine step>,<derived metrics>``.
+
+The vision rows replay a ragged image workload through the VisionEngine
+twice — fixed full-batch plans vs bucketed batch plans (DESIGN.md §10) —
+and surface ``VisionStats.pad_fraction``: the fraction of issued lanes
+that were dead padding, which bucketing exists to shrink (the PR-4
+``pad_lanes`` counter, finally reported).
 """
 from __future__ import annotations
 
@@ -27,6 +33,10 @@ N_REQUESTS = 16
 PROMPT_LEN = 16
 DECODE_STEPS = 16
 
+VISION_BATCH = 8
+# ragged on purpose: 8+8+2 — the tail batch is where bucketing pays
+VISION_REQUESTS = 18
+
 
 def _workload(vocab: int, rng: np.random.RandomState):
     # two prompt lengths so the prefill compile cache is exercised but
@@ -36,6 +46,38 @@ def _workload(vocab: int, rng: np.random.RandomState):
                           size=N_REQUESTS)
     return [(rng.randint(0, vocab, size=int(l)), int(b))
             for l, b in zip(lens, budgets)]
+
+
+def _vision_rows() -> None:
+    """Fixed vs bucketed vision serving on the same ragged workload:
+    ``pad_fraction`` is the bucketed-plan win made visible."""
+    from repro.models.cnn import PaperCNN, PaperCNNConfig
+    from repro.serve.vision import VisionEngine, VisionEngineConfig
+
+    model = PaperCNN(PaperCNNConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    imgs = [rng.randn(*model.input_shape()[1:]).astype(np.float32)
+            for _ in range(VISION_REQUESTS)]
+    for mode, buckets in (("fixed", None), ("bucketed", "auto")):
+        eng = VisionEngine(model, params,
+                           VisionEngineConfig(batch=VISION_BATCH,
+                                              buckets=buckets))
+        for img in imgs:                # warm pass: compiles every bucket
+            eng.submit(img)             # this workload touches
+        eng.run()
+        from repro.serve.vision import VisionStats
+        eng.stats = VisionStats()       # steady-state numbers only
+        for img in imgs:
+            eng.submit(img)
+        eng.run()
+        s = eng.stats
+        emit(f"serve_tput/vision_{mode}",
+             s.wall_s / max(s.steps, 1) * 1e6,
+             f"img_s={s.images_per_s:.1f} "
+             f"pad_fraction={s.pad_fraction:.2f} "
+             f"lane_util={s.lane_utilization:.2f} "
+             f"buckets={list(eng.buckets)}")
 
 
 def run() -> None:
@@ -71,6 +113,7 @@ def run() -> None:
              f"req_s={(len(finished) - warm_reqs) / wall:.2f} "
              f"occ={engine.scheduler.stats.mean_occupancy():.2f} "
              f"util={s.decode_utilization:.2f}")
+    _vision_rows()
 
 
 if __name__ == "__main__":

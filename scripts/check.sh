@@ -4,6 +4,13 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+echo "== tracked-bytecode gate (no committed __pycache__/*.pyc) =="
+if git ls-files | grep -q '\.pyc$'; then
+  echo "FAIL: tracked .pyc files:"
+  git ls-files | grep '\.pyc$'
+  exit 1
+fi
+
 echo "== docs link check (DESIGN.md §N references) =="
 python scripts/check_docs_links.py
 
@@ -20,6 +27,29 @@ fi
 
 echo "== pipeline_sweep smoke (fused plan vs layer-by-layer) =="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.pipeline_sweep --smoke --no-json
+
+echo "== tuning-cache persistence smoke (write in one process, load+use in a fresh one) =="
+TUNE_TMP="$(mktemp -d)"
+trap 'rm -rf "$TUNE_TMP"' EXIT
+PYTHONPATH=src python - "$TUNE_TMP/cache.json" <<'PY'
+import sys
+import jax
+import repro.ops.autotune as at
+at.TUNE_WARMUP, at.TUNE_ITERS = 1, 1          # smoke: one timed launch
+from repro.ops import ExecPolicy, TUNING_CACHE, ensure_tuned
+x = jax.random.normal(jax.random.PRNGKey(0), (4, 1, 28, 28))
+w = jax.random.normal(jax.random.PRNGKey(1), (15, 1, 3, 3))
+ensure_tuned("fused_conv_block", x, w, None, stride=(1, 1),
+             policy=ExecPolicy(backend="pallas"))
+assert len(TUNING_CACHE) >= 1
+TUNING_CACHE.save(sys.argv[1])
+print(f"wrote {len(TUNING_CACHE)} entries")
+PY
+PYTHONPATH=src python -m repro.launch.serve --arch mnist_cnn --capacity 4 \
+  --requests 6 --tuning-cache "$TUNE_TMP/cache.json" --autotune \
+  | tee "$TUNE_TMP/serve.log"
+grep -q "tuning cache: loaded 1 entries" "$TUNE_TMP/serve.log"
+grep -q "autotuned stages" "$TUNE_TMP/serve.log"
 
 echo "== shard_sweep smoke (channel-parallel plans, 2 forced devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \

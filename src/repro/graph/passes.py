@@ -45,7 +45,8 @@ from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
                             QuantizeNode, ReluNode, ShardingSpec, TensorSpec)
 
 __all__ = ["fuse_conv_blocks", "lower_quant", "eliminate_dead_quantize",
-           "place_channel_parallel", "default_passes"]
+           "place_channel_parallel", "default_passes", "tunable_stages",
+           "stage_input_spec"]
 
 
 def _single_consumer(graph: Graph, nid: int) -> Node | None:
@@ -239,6 +240,34 @@ def place_channel_parallel(graph: Graph, model_size: int, *,
             f"axis ({model_size} devices); use divisible channel counts "
             f"or drop the override for per-layer auto-placement")
     return replace(graph, nodes=tuple(placed)).validate()
+
+
+def tunable_stages(graph: Graph) -> list[Node]:
+    """The stages a measured autotuner can size (DESIGN.md §10): conv,
+    fused conv block, and dense nodes, in execution order. Channel-sharded
+    stages are excluded — their per-device shapes live inside shard_map,
+    where tiles resolve through the tuning cache by (per-shard) signature
+    rather than through plan-baked overrides."""
+    out = []
+    for node in graph:
+        if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
+            spec = node.sharding
+            if spec is None or spec.mode == "none":
+                out.append(node)
+        elif isinstance(node, DenseNode):
+            out.append(node)
+    return out
+
+
+def stage_input_spec(graph: Graph, node: Node) -> TensorSpec:
+    """The *float-level* activation spec feeding ``node``: quantize nodes
+    are transparent (an int8_act QuantizeNode re-emits its input's spec —
+    the executed QTensor's codes keep that shape, and the kernels contract
+    codes as float32)."""
+    src = graph.node(node.inputs[0])
+    while isinstance(src, QuantizeNode) and src.inputs:
+        src = graph.node(src.inputs[0])
+    return src.out
 
 
 def default_passes(graph: Graph, quant: str = "none",

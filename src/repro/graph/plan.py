@@ -21,6 +21,14 @@ analogue of the paper's synthesized accelerator:
 returns a ``BoundPlan`` — per-batch calls then skip weight requantization
 entirely, the scale constant-folding of DESIGN.md §8.
 
+Compiling with ``autotune=True`` makes the plan **measured** (DESIGN.md
+§10): ``bind`` runs the candidate-grid search of ``repro.ops.autotune``
+once per conv/fused/dense stage (cache hits — including entries loaded
+from a persisted tuning-cache file — skip the measurement) and bakes the
+winning tile parameters into the BoundPlan as per-stage ``ExecPolicy``
+tiling overrides, so the serve hot path never re-tunes and never even
+consults the cache.
+
 Compiling with ``mesh=`` makes the plan **sharded** (DESIGN.md §9): the
 placement pass stamps a ``ShardingSpec`` on every conv stage (ICP vs OCP
 per layer, paper §III.A), execution routes those stages through the
@@ -78,6 +86,8 @@ class ExecutionPlan:
     qformat: QFormat = field(default_factory=QFormat)
     compile_policy: ExecPolicy | None = None
     mesh: Mesh | None = None
+    # measured tile selection at bind time (DESIGN.md §10)
+    autotune: bool = False
 
     # ---------- policy resolution ----------
     def _base_policy(self, policy: ExecPolicy | None) -> ExecPolicy:
@@ -97,14 +107,25 @@ class ExecutionPlan:
         return pol.with_options(quant="none")
 
     # ---------- execution ----------
+    @staticmethod
+    def _stage_policy(base: ExecPolicy, tiles: dict | None) -> ExecPolicy:
+        """The per-stage policy: baked (bind-time autotuned) tile
+        parameters ride as namespaced tiling overrides, which win over
+        the tuning cache and the heuristics in ``tile_params``."""
+        if not tiles:
+            return base
+        return base.with_options(tiling={**base.tile_overrides, **tiles})
+
     def __call__(self, params, x, *, policy: ExecPolicy | None = None,
-                 _folded: dict | None = None, _placed: dict | None = None):
+                 _folded: dict | None = None, _placed: dict | None = None,
+                 _tuned: dict | None = None):
         from repro.ops import conv2d, dense, fused_conv_block
         base = self._base_policy(policy)
         dense_pol = base.with_options(quant=self.quant, qformat=self.qformat)
         env: dict[int, jax.Array] = {}
         folded = _folded or {}
         placed = _placed or {}
+        tuned = _tuned or {}
 
         def _weight(node, idx, attr):
             """Weight operand: pre-placed by a mesh-aware ``bind`` when
@@ -125,10 +146,11 @@ class ExecutionPlan:
             if self.mesh is None or spec is None or spec.mode == "none":
                 # single-device (or pure-data-parallel: XLA propagates the
                 # caller's batch sharding through elementwise stages)
+                pol = self._stage_policy(base, tuned.get(node.id))
                 if fused:
                     return fused_conv_block(xin, wv, bv, stride=node.stride,
-                                            odd=node.odd, policy=base)
-                return conv2d(xin, wv, bv, stride=node.stride, policy=base)
+                                            odd=node.odd, policy=pol)
+                return conv2d(xin, wv, bv, stride=node.stride, policy=pol)
             from repro.core.parallelism import (
                 ChannelParallelism, conv2d_channel_parallel,
                 fused_conv_block_channel_parallel)
@@ -173,13 +195,17 @@ class ExecutionPlan:
                     # int8 datapath directly (== ops.dense under int8)
                     from repro.ops import qdense
                     xv = env[node.inputs[0]]
-                    out = qdense(xv, wq, out_dtype=xv.dtype, policy=base)
+                    out = qdense(xv, wq, out_dtype=xv.dtype,
+                                 policy=self._stage_policy(
+                                     base, tuned.get(node.id)))
                     b = _weight(node, 2, "b")
                     env[node.id] = out if b is None else out + b
                 else:
                     env[node.id] = dense(
                         env[node.inputs[0]], _weight(node, 1, "w"),
-                        _weight(node, 2, "b"), policy=dense_pol)
+                        _weight(node, 2, "b"),
+                        policy=self._stage_policy(dense_pol,
+                                                  tuned.get(node.id)))
             else:
                 raise TypeError(f"no executor for node {node.pretty()}")
         return env[self.graph.output_id]
@@ -232,16 +258,103 @@ class ExecutionPlan:
         elif node.b is not None:
             placed[(node.id, "b")] = put(node.b.fetch(params), vspec)
 
-    def bind(self, params, *, policy: ExecPolicy | None = None
-             ) -> "BoundPlan":
-        """Fold weight quantization against ``params`` now: every
-        constant QuantizeNode (conv weights/biases), plus — under int8 —
-        each dense layer's per-output-channel QTensor, so per-batch calls
-        skip weight requantization entirely (only the per-token activation
-        scales stay dynamic). On a mesh-compiled plan the folded/fetched
-        conv weights are additionally ``device_put`` under their
-        ShardingSpec, so binding is a one-time placement and per-batch
-        calls start from resident shards."""
+    def _stage_calls(self, params, folded: dict):
+        """Yield (node, op, args, kwargs) for every tunable stage — the
+        concrete calling convention the autotuner measures: a
+        representative activation built from the graph's static specs,
+        the real bound weights (quantization included; int8 stages get
+        codes-as-f32 plus the requant-epilogue scale operand)."""
+        import numpy as np
+        from repro.graph.passes import stage_input_spec, tunable_stages
+        from repro.ops.impls import split_requant
+        rng = np.random.RandomState(0)
+        for node in tunable_stages(self.graph):
+            spec = stage_input_spec(self.graph, node)
+            x = jnp.asarray(rng.standard_normal(spec.shape), spec.dtype)
+            if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
+                op = ("fused_conv_block"
+                      if isinstance(node, FusedConvBlockNode) else "conv2d")
+                wv = (folded[node.inputs[1]] if len(node.inputs) > 1
+                      else node.w.fetch(params))
+                bv = (folded.get(node.inputs[2])
+                      if len(node.inputs) > 2 else
+                      (None if node.b is None else node.b.fetch(params)))
+                scale = None
+                if isinstance(wv, QTensor):
+                    _, w_arr, scale = split_requant(
+                        QTensor(x.astype(jnp.float32), jnp.float32(1.0)), wv)
+                else:
+                    w_arr = wv
+                kw = dict(stride=node.stride)
+                if op == "fused_conv_block":
+                    kw["scale"] = scale     # the in-kernel requant epilogue
+                yield node, op, (x, w_arr, bv), kw
+            else:                           # DenseNode
+                wq = folded.get(node.id)
+                if wq is None:              # fp dense is a plain einsum —
+                    continue                # nothing to tune
+                xq = quantize_int8(x.reshape(x.shape[0], -1), axis=-1)
+                yield node, "qmatmul", (xq.codes, wq.codes,
+                                        xq.scale, wq.scale), {}
+
+    def _autotune_stages(self, params, folded: dict,
+                         policy: ExecPolicy | None = None
+                         ) -> dict[int, dict]:
+        """Measure tile winners for every tunable stage (DESIGN.md §10).
+
+        Per stage: run ``ensure_tuned`` on the stage's concrete calling
+        convention — a tuning-cache hit skips the measurement, a miss
+        times the candidate grid — and return {node id: namespaced tiling
+        overrides} for baking. ``policy`` is the *bind* policy (the one
+        the bound plan will execute under): stages whose dispatch under
+        it would not land on the pallas backend tune nothing
+        (``ensure_tuned`` returns None) — tiles only bind there. A winner
+        that IS the heuristic point bakes nothing either — the default
+        resolution already produces that exact program.
+        """
+        from repro.ops.autotune import ensure_tuned, heuristic_tiles
+        base = self._base_policy(policy)
+        tuned: dict[int, dict] = {}
+        for node, op, args, kw in self._stage_calls(params, folded):
+            best = ensure_tuned(op, *args, policy=base, **kw)
+            if best and best != heuristic_tiles(op, *args, **kw):
+                tuned[node.id] = {f"{op}.{k}": v for k, v in best.items()}
+        return tuned
+
+    def pin_heuristic_tiles(self, params, folded: dict | None = None
+                            ) -> int:
+        """Winner-validation hook (DESIGN.md §10): overwrite every
+        tunable stage's tuning-cache entry with the analytic heuristic
+        point. Callers use this when a plan-level A/B shows the op-level
+        winners regressing end to end (``benchmarks/pipeline_sweep.py``);
+        re-binding afterwards bakes nothing and later runs keep the
+        incumbent instead of re-chasing the same noise. Pass an existing
+        ``BoundPlan.folded`` to skip re-folding the weight quantization.
+        Returns how many stage entries were pinned."""
+        from repro.ops.autotune import heuristic_tiles
+        from repro.ops.tiling import TUNING_CACHE
+        pinned = 0
+        if folded is None:
+            folded = self._fold_constants(params)
+        for node, op, args, kw in self._stage_calls(params, folded):
+            heur = heuristic_tiles(op, *args, **kw)
+            if heur is None:
+                continue
+            if op == "qmatmul":
+                m, k = args[0].shape
+                sig = (m, k, args[1].shape[1])
+            else:
+                from repro.ops.tiling import conv_signature
+                sig = conv_signature(args[0].shape, args[1].shape,
+                                     tuple(kw.get("stride", (1, 1))))
+            TUNING_CACHE.put(op, sig, args[0].dtype, heur)
+            pinned += 1
+        return pinned
+
+    def _fold_constants(self, params) -> dict:
+        """The weight-quantization constant fold of ``bind``: every
+        constant QuantizeNode, plus each dense layer's QTensor under
+        int8."""
         folded = {
             node.id: _apply_quantize(node, node.ref.fetch(params),
                                      self.qformat)
@@ -252,13 +365,31 @@ class ExecutionPlan:
                 if isinstance(node, DenseNode):
                     folded[node.id] = quantize_int8(node.w.fetch(params),
                                                     axis=0)
+        return folded
+
+    def bind(self, params, *, policy: ExecPolicy | None = None
+             ) -> "BoundPlan":
+        """Fold weight quantization against ``params`` now: every
+        constant QuantizeNode (conv weights/biases), plus — under int8 —
+        each dense layer's per-output-channel QTensor, so per-batch calls
+        skip weight requantization entirely (only the per-token activation
+        scales stay dynamic). On a mesh-compiled plan the folded/fetched
+        conv weights are additionally ``device_put`` under their
+        ShardingSpec, so binding is a one-time placement and per-batch
+        calls start from resident shards. On an ``autotune=True`` plan the
+        measured tile winners are baked in here too — the per-batch call
+        runs on tuned tiles without ever touching the tuner or the cache."""
+        folded = self._fold_constants(params)
+        tuned: dict = {}
+        if self.autotune:
+            tuned = self._autotune_stages(params, folded, policy=policy)
         placed: dict = {}
         if self.mesh is not None:
             for node in self.graph:
                 if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
                     self._shard_weight(node, folded, placed, params)
         return BoundPlan(plan=self, params=params, folded=folded,
-                         policy=policy, placed=placed)
+                         policy=policy, placed=placed, tuned=tuned)
 
     # ---------- introspection ----------
     def stages(self) -> list[str]:
@@ -282,24 +413,28 @@ class ExecutionPlan:
 @dataclass(frozen=True)
 class BoundPlan:
     """An ExecutionPlan closed over one params pytree with weight
-    quantization pre-folded (and, on a mesh plan, weights pre-sharded) —
-    call as ``bound(images)``."""
+    quantization pre-folded (and, on a mesh plan, weights pre-sharded;
+    on an autotuned plan, measured tile winners pre-baked) — call as
+    ``bound(images)``."""
 
     plan: ExecutionPlan
     params: object
     folded: dict
     policy: ExecPolicy | None = None
     placed: dict = field(default_factory=dict)
+    # {node id: namespaced tiling overrides} measured at bind time
+    tuned: dict = field(default_factory=dict)
 
     def __call__(self, x, *, policy: ExecPolicy | None = None):
         return self.plan(self.params, x,
                          policy=policy if policy is not None else self.policy,
-                         _folded=self.folded, _placed=self.placed)
+                         _folded=self.folded, _placed=self.placed,
+                         _tuned=self.tuned)
 
 
 def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
                   policy: ExecPolicy | None = None, fuse: bool = True,
-                  mesh: Mesh | None = None,
+                  mesh: Mesh | None = None, autotune: bool = False,
                   dtype: str = "float32") -> ExecutionPlan:
     """trace → passes → plan for any model whose forward routes through
     the hooked functional layer (DESIGN.md §8).
@@ -312,6 +447,10 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
     channel-parallel placement pass (DESIGN.md §9) and bakes the mesh into
     the plan: ICP vs OCP per conv stage from channel counts, overridable
     via ``ExecPolicy.channel_parallel``.
+
+    ``autotune=True`` (or ``ExecPolicy.autotune``) defers to DESIGN.md
+    §10: ``plan.bind`` measures tile candidates per stage (tuning-cache
+    hits skip the measurement) and bakes the winners into the BoundPlan.
     """
     if input_shape is None:
         input_shape = model.input_shape()
@@ -336,4 +475,5 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
             data="data" in mesh.axis_names)
     return ExecutionPlan(graph=graph, quant=quant_pol.quant,
                          qformat=quant_pol.qformat, compile_policy=pol,
-                         mesh=mesh)
+                         mesh=mesh,
+                         autotune=autotune or quant_pol.autotune)

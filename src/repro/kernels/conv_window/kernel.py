@@ -45,53 +45,62 @@ from jax.experimental import pallas as pl
 
 def _conv_window_kernel(x_ref, w_ref, b_ref, o_ref, *,
                         kh: int, kw: int, stride: tuple[int, int],
-                        rb: int, wo: int, n: int, ho: int):
-    """One grid step: slab -> windows -> MXU contraction -> output tile.
+                        rb: int, wo: int, n: int, ho: int, bb: int):
+    """One grid step: BB × (slab -> windows -> MXU contraction), one
+    weight-tile DMA.
 
-    x_ref: (N, rows_in, W)   input slab (batch squeezed), rows_in=(rb-1)*sh+kh
-    w_ref: (N*Kh*Kw, MB)     flat weight tile (feature order N, Kh, Kw)
-    b_ref: (1, MB)           bias tile
-    o_ref: (MB, RB, Wo)      output tile (batch squeezed)
+    x_ref: (BB, N, rows_in, W)  input slab block, rows_in=(rb-1)*sh+kh
+    w_ref: (N*Kh*Kw, MB)        flat weight tile (feature order N, Kh, Kw)
+    b_ref: (1, MB)              bias tile
+    o_ref: (BB, MB, RB, Wo)     output tile
+
+    The BB loop is a static unroll so each image runs the *same*
+    contraction as the BB=1 kernel (bitwise-identical output per image for
+    any BB) while the weight tile crosses HBM once per BB images.
     """
     sh, sw = stride
-    slab = x_ref[...]                       # (N, rows_in, W) in VMEM
+    out_imgs = []
+    for img in range(bb):
+        slab = x_ref[img]                   # (N, rows_in, W) in VMEM
 
-    # WINDOW_BUFFER walk: Kh*Kw static slices, each strided to (N, RB, Wo).
-    taps = []
-    for i in range(kh):
-        for j in range(kw):
-            tap = jax.lax.slice(
-                slab,
-                (0, i, j),
-                (n, i + (rb - 1) * sh + 1, j + (wo - 1) * sw + 1),
-                (1, sh, sw),
-            )                               # (N, RB, Wo)
-            taps.append(tap)
-    # windows: feature axis ordered (N, Kh, Kw) to match the flat weights.
-    win = jnp.stack(taps, axis=1)           # (N, Kh*Kw, RB, Wo)
-    win = win.reshape(n * kh * kw, rb * wo)  # (η, RB*Wo)
+        # WINDOW_BUFFER walk: Kh*Kw static slices, strided to (N, RB, Wo).
+        taps = []
+        for i in range(kh):
+            for j in range(kw):
+                tap = jax.lax.slice(
+                    slab,
+                    (0, i, j),
+                    (n, i + (rb - 1) * sh + 1, j + (wo - 1) * sw + 1),
+                    (1, sh, sw),
+                )                           # (N, RB, Wo)
+                taps.append(tap)
+        # windows: feature axis ordered (N, Kh, Kw) to match flat weights.
+        win = jnp.stack(taps, axis=1)       # (N, Kh*Kw, RB, Wo)
+        win = win.reshape(n * kh * kw, rb * wo)  # (η, RB*Wo)
 
-    # The MXU is the multiply-add tree: one contraction does all η products
-    # and their reduction per output element (paper Eq. 9).
-    acc = jax.lax.dot_general(
-        w_ref[...], win,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                       # (MB, RB*Wo)
-    acc = acc + b_ref[0, :][:, None]
-    # Mask rows past Ho (last row-block ragged edge writes garbage rows that
-    # the out BlockSpec clips; keep values finite for determinism).
-    o_ref[...] = acc.reshape(-1, rb, wo).astype(o_ref.dtype)
+        # The MXU is the multiply-add tree: one contraction does all η
+        # products and their reduction per output element (paper Eq. 9).
+        acc = jax.lax.dot_general(
+            w_ref[...], win,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                   # (MB, RB*Wo)
+        acc = acc + b_ref[0, :][:, None]
+        # Rows past Ho (last row-block ragged edge) are garbage the out
+        # BlockSpec clips; keep values finite for determinism.
+        out_imgs.append(acc.reshape(-1, rb, wo))
+    o_ref[...] = jnp.stack(out_imgs, axis=0).astype(o_ref.dtype)
 
 
 def conv2d_window_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
                          kh: int, kw: int, stride: tuple[int, int],
-                         rb: int, mb: int, interpret: bool
+                         rb: int, mb: int, bb: int = 1, interpret: bool
                          ) -> jax.Array:
     """Launch the kernel. x: (B, N, H, W); wf: (η, M) flat weights; b: (M,).
 
-    rb: output rows per block; mb: output channels per block.
-    Returns (B, M, Ho, Wo) in x.dtype.
+    rb: output rows per block; mb: output channels per block; bb: images
+    per grid step (weight reuse — a measured autotuner candidate,
+    DESIGN.md §10). Returns (B, M, Ho, Wo) in x.dtype.
     """
     bsz, n, h, w = x.shape
     eta, m = wf.shape
@@ -100,29 +109,30 @@ def conv2d_window_pallas(x: jax.Array, wf: jax.Array, b: jax.Array, *,
     ho = (h - kh) // sh + 1
     wo = (w - kw) // sw + 1
     assert ho % rb == 0 and m % mb == 0, (ho, rb, m, mb)
+    assert bsz % bb == 0, (bsz, bb)
     rows_in = (rb - 1) * sh + kh
 
-    grid = (bsz, ho // rb, m // mb)
+    grid = (bsz // bb, ho // rb, m // mb)
 
     kernel = functools.partial(
         _conv_window_kernel, kh=kh, kw=kw, stride=stride,
-        rb=rb, wo=wo, n=n, ho=ho)
+        rb=rb, wo=wo, n=n, ho=ho, bb=bb)
 
     # the slab: full width (line-buffer fidelity), halo rows via
     # element-indexed offsets — consecutive row blocks overlap by
-    # kh - sh rows exactly like adjacent line-buffer windows. The same
-    # index map serves both pallas generations: for squeezed / full-extent
-    # dims the block index equals the element offset.
-    slab_map = lambda bi, ri, mi: (bi, 0, ri * rb * sh, 0)  # noqa: E731
+    # kh - sh rows exactly like adjacent line-buffer windows. The batch
+    # dim is a BB-image block.
     if hasattr(pl, "Squeezed"):          # newer pallas: per-dim block types
-        slab_spec = pl.BlockSpec((pl.Squeezed(), n, pl.Element(rows_in), w),
-                                 slab_map)
-        out_spec = pl.BlockSpec((pl.Squeezed(), mb, rb, wo),
+        slab_spec = pl.BlockSpec((bb, n, pl.Element(rows_in), w),
+                                 lambda bi, ri, mi: (bi, 0, ri * rb * sh, 0))
+        out_spec = pl.BlockSpec((bb, mb, rb, wo),
                                 lambda bi, ri, mi: (bi, mi, ri, 0))
-    else:                                # jax 0.4.x: Unblocked + None-squeeze
-        slab_spec = pl.BlockSpec((None, n, rows_in, w), slab_map,
-                                 indexing_mode=pl.Unblocked())
-        out_spec = pl.BlockSpec((None, mb, rb, wo),
+    else:                                # jax 0.4.x: Unblocked (element
+        slab_spec = pl.BlockSpec(        # offsets in every dim)
+            (bb, n, rows_in, w),
+            lambda bi, ri, mi: (bi * bb, 0, ri * rb * sh, 0),
+            indexing_mode=pl.Unblocked())
+        out_spec = pl.BlockSpec((bb, mb, rb, wo),
                                 lambda bi, ri, mi: (bi, mi, ri, 0))
 
     return pl.pallas_call(

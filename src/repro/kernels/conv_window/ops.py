@@ -20,14 +20,15 @@ import jax.numpy as jnp
 
 from repro.kernels.conv_window.kernel import conv2d_window_pallas
 from repro.ops.policy import ExecPolicy, current_policy
-from repro.ops.tiling import choose_conv_blocks, largest_divisor, tile_params
+from repro.ops.tiling import (choose_conv_blocks, conv_signature,
+                              largest_divisor, tile_params)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "interpret", "rb", "mb"))
+                   static_argnames=("stride", "interpret", "rb", "mb", "bb"))
 def _conv2d_window_jit(x: jax.Array, w: jax.Array, b: jax.Array | None, *,
                        stride: tuple[int, int], interpret: bool,
-                       rb: int, mb: int) -> jax.Array:
+                       rb: int, mb: int, bb: int) -> jax.Array:
     bsz, n, h, wdt = x.shape
     m, n2, kh, kw = w.shape
     assert n == n2, (x.shape, w.shape)
@@ -40,27 +41,33 @@ def _conv2d_window_jit(x: jax.Array, w: jax.Array, b: jax.Array | None, *,
     pad_rows = (-ho) % rb
     if pad_rows:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_rows * sh), (0, 0)))
+    # pad B to a multiple of bb with dead images, sliced off the output
+    pad_b = (-bsz) % bb
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0), (0, 0), (0, 0)))
 
     wf = w.reshape(m, n * kh * kw).T        # (η, M), feature order (N,Kh,Kw)
     bias = jnp.zeros((1, m), x.dtype) if b is None \
         else b.reshape(1, m).astype(x.dtype)
 
     out = conv2d_window_pallas(x, wf.astype(x.dtype), bias, kh=kh, kw=kw,
-                               stride=stride, rb=rb, mb=mb,
+                               stride=stride, rb=rb, mb=mb, bb=bb,
                                interpret=interpret)
-    return out[:, :, :ho, :]
+    return out[:bsz, :, :ho, :]
 
 
 def conv2d_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
                   *, stride: tuple[int, int] = (1, 1),
                   interpret: bool | None = None,
                   rb: int | None = None, mb: int | None = None,
+                  bb: int | None = None,
                   policy: ExecPolicy | None = None) -> jax.Array:
     """Window-stationary conv2d. x: (B,N,H,W), w: (M,N,Kh,Kw) -> (B,M,Ho,Wo).
 
     VALID padding, like the paper's accelerator. ``interpret=None``
-    auto-detects (kernel body interpreted everywhere but TPU); ``rb``/``mb``
-    override the resolved tile sizes.
+    auto-detects (kernel body interpreted everywhere but TPU);
+    ``rb``/``mb``/``bb`` override the resolved tile sizes (``bb`` = images
+    per grid step, one weight-tile DMA per BB images).
     """
     pol = policy if policy is not None else current_policy()
     if interpret is None:
@@ -70,15 +77,24 @@ def conv2d_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
     m, kh, kw = w.shape[0], w.shape[2], w.shape[3]
     defaults = choose_conv_blocks(n, h, wdt, m, kh, kw, tuple(stride),
                                   x.dtype.itemsize)
-    sig = (n, h, wdt, m, kh, kw, *stride)
+    sig = conv_signature(x.shape, w.shape, stride)
+    if (pol.autotune and rb is None and mb is None and bb is None
+            and not isinstance(x, jax.core.Tracer)):
+        from repro.ops.autotune import ensure_tuned  # lazy: cycle
+        ensure_tuned("conv2d", x, w, b, stride=tuple(stride), policy=pol)
     tiles = tile_params("conv2d", sig, x.dtype, defaults, pol.tile_overrides)
     if rb is not None:
         tiles["rb"] = rb
     if mb is not None:
         tiles["mb"] = mb
-    # mb must divide M (grid constraint); rb is free — ragged Ho is padded
+    if bb is not None:
+        tiles["bb"] = bb
+    # mb must divide M (grid constraint); rb and bb are free — ragged Ho
+    # and B are padded
     tiles["mb"] = largest_divisor(m, tiles["mb"])
     tiles["rb"] = max(1, tiles["rb"])
+    tiles["bb"] = max(1, min(tiles["bb"], x.shape[0]))
     return _conv2d_window_jit(x, w, b, stride=tuple(stride),
                               interpret=interpret,
-                              rb=tiles["rb"], mb=tiles["mb"])
+                              rb=tiles["rb"], mb=tiles["mb"],
+                              bb=tiles["bb"])

@@ -1,5 +1,5 @@
 """Fused conv+bias+relu+pool Pallas TPU kernel — the deep pipeline between
-layers (DESIGN.md §8).
+layers (DESIGN.md §8), batch-blocked (DESIGN.md §10).
 
 This extends the window-stationary conv kernel (kernels/conv_window) by one
 pipeline stage: each grid step computes a block of **pooled** output rows,
@@ -21,9 +21,17 @@ HBM traffic per block: input slab + weight tile + *pooled* output tile —
 the (MB, 2·PB, Wo) activation that the unfused path round-trips is gone,
 a 4×(+relu) output-traffic reduction on top of the window reuse.
 
-Grid: (B, Po/PB, M/MB) with Po = Ho/2 pooled rows. Constraints (enforced
-by the wrapper/predicate): Ho and Wo even (2×2/2 pool, VALID), PB divides
-Po after ragged-row padding, MB divides M.
+**Batch blocking**: each grid step carries BB images, so the (η, MB)
+weight tile is DMA'd once per (pi, mi) *block of images* instead of once
+per image — weight HBM traffic drops ~BB×. The per-image compute is a
+statically unrolled loop over the slab's batch dim, so every image runs
+the *same* contraction as the BB=1 kernel and the output is bitwise
+identical for any BB (pinned by tests/test_autotune.py). BB is a measured
+autotuner candidate (repro.ops.autotune), not a heuristic default.
+
+Grid: (B/BB, Po/PB, M/MB) with Po = Ho/2 pooled rows. Constraints
+(enforced by the wrapper/predicate): Ho and Wo even (2×2/2 pool, VALID),
+PB divides Po and BB divides B after ragged padding, MB divides M.
 """
 from __future__ import annotations
 
@@ -38,16 +46,16 @@ from repro.core.quantize import requant_epilogue
 
 def _fused_cwp_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, *,
                       kh: int, kw: int, stride: tuple[int, int],
-                      pb: int, wo: int, n: int):
-    """One grid step: slab -> windows -> MXU -> ×scale -> +bias -> relu
-    -> pool.
+                      pb: int, wo: int, n: int, bb: int):
+    """One grid step: BB × (slab -> windows -> MXU -> ×scale -> +bias ->
+    relu -> pool), one weight-tile DMA.
 
-    x_ref: (N, rows_in, W)  input slab, rows_in = (2·pb−1)·sh + kh
-    w_ref: (N·Kh·Kw, MB)    flat weight tile (feature order N, Kh, Kw)
-    s_ref: (1, MB)          requant scale tile (1.0 when not quantized —
-                            an exact no-op multiply on the accumulator)
-    b_ref: (1, MB)          bias tile
-    o_ref: (MB, PB, Wo/2)   pooled output tile
+    x_ref: (BB, N, rows_in, W)  input slab, rows_in = (2·pb−1)·sh + kh
+    w_ref: (N·Kh·Kw, MB)        flat weight tile (feature order N, Kh, Kw)
+    s_ref: (1, MB)              requant scale tile (1.0 when not quantized —
+                                an exact no-op multiply on the accumulator)
+    b_ref: (1, MB)              bias tile
+    o_ref: (BB, MB, PB, Wo/2)   pooled output tile
 
     The scale is the int8 requant epilogue: operands arrive as integer
     codes, the MXU contraction accumulates them exactly, and sx·sw[m]
@@ -56,44 +64,48 @@ def _fused_cwp_kernel(x_ref, w_ref, s_ref, b_ref, o_ref, *,
     """
     sh, sw = stride
     rb = 2 * pb                             # conv rows per pooled block
-    slab = x_ref[...]                       # (N, rows_in, W) in VMEM
+    pooled_imgs = []
+    for img in range(bb):                   # static unroll: BB images share
+        slab = x_ref[img]                   # the resident weight tile
+        taps = []
+        for i in range(kh):
+            for j in range(kw):
+                tap = jax.lax.slice(
+                    slab,
+                    (0, i, j),
+                    (n, i + (rb - 1) * sh + 1, j + (wo - 1) * sw + 1),
+                    (1, sh, sw),
+                )                           # (N, RB, Wo)
+                taps.append(tap)
+        win = jnp.stack(taps, axis=1)       # (N, Kh*Kw, RB, Wo)
+        win = win.reshape(n * kh * kw, rb * wo)
 
-    taps = []
-    for i in range(kh):
-        for j in range(kw):
-            tap = jax.lax.slice(
-                slab,
-                (0, i, j),
-                (n, i + (rb - 1) * sh + 1, j + (wo - 1) * sw + 1),
-                (1, sh, sw),
-            )                               # (N, RB, Wo)
-            taps.append(tap)
-    win = jnp.stack(taps, axis=1)           # (N, Kh*Kw, RB, Wo)
-    win = win.reshape(n * kh * kw, rb * wo)
-
-    # conv: one MXU contraction = all η multiplies + the addition tree
-    acc = jax.lax.dot_general(
-        w_ref[...], win,
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )                                       # (MB, RB*Wo)
-    acc = requant_epilogue(acc, s_ref[0, :][:, None], b_ref[0, :][:, None])
-    # relu + 2×2/2 max pool, entirely in registers: pair rows and columns
-    act = jnp.maximum(acc, 0.0).reshape(-1, pb, 2, wo // 2, 2)
-    pooled = act.max(axis=(2, 4))           # (MB, PB, Wo/2)
-    o_ref[...] = pooled.astype(o_ref.dtype)
+        # conv: one MXU contraction = all η multiplies + the addition tree
+        acc = jax.lax.dot_general(
+            w_ref[...], win,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                   # (MB, RB*Wo)
+        acc = requant_epilogue(acc, s_ref[0, :][:, None],
+                               b_ref[0, :][:, None])
+        # relu + 2×2/2 max pool, entirely in registers: pair rows and cols
+        act = jnp.maximum(acc, 0.0).reshape(-1, pb, 2, wo // 2, 2)
+        pooled_imgs.append(act.max(axis=(2, 4)))    # (MB, PB, Wo/2)
+    o_ref[...] = jnp.stack(pooled_imgs, axis=0).astype(o_ref.dtype)
 
 
 def fused_cwp_pallas(x: jax.Array, wf: jax.Array, s: jax.Array,
                      b: jax.Array, *,
                      kh: int, kw: int, stride: tuple[int, int],
-                     pb: int, mb: int, interpret: bool) -> jax.Array:
+                     pb: int, mb: int, bb: int = 1,
+                     interpret: bool) -> jax.Array:
     """Launch. x: (B, N, H, W); wf: (η, M) flat weights; s: (1, M) requant
     scales (ones when unquantized); b: (1, M) bias.
 
-    pb: pooled output rows per block; mb: output channels per block.
-    Returns (B, M, Po, Wo/2) in x.dtype; requires even Ho/Wo, pb | Po,
-    mb | M (the wrapper pads/clamps).
+    pb: pooled output rows per block; mb: output channels per block; bb:
+    images per grid step (weight reuse; the winner is measured, see
+    repro.ops.autotune). Returns (B, M, Po, Wo/2) in x.dtype; requires
+    even Ho/Wo, pb | Po, mb | M, bb | B (the wrapper pads/clamps).
     """
     bsz, n, h, w = x.shape
     eta, m = wf.shape
@@ -104,24 +116,27 @@ def fused_cwp_pallas(x: jax.Array, wf: jax.Array, s: jax.Array,
     assert ho % 2 == 0 and wo % 2 == 0, (ho, wo)
     po = ho // 2
     assert po % pb == 0 and m % mb == 0, (po, pb, m, mb)
+    assert bsz % bb == 0, (bsz, bb)
     rows_in = (2 * pb - 1) * sh + kh
 
-    grid = (bsz, po // pb, m // mb)
+    grid = (bsz // bb, po // pb, m // mb)
     kernel = functools.partial(_fused_cwp_kernel, kh=kh, kw=kw,
-                               stride=stride, pb=pb, wo=wo, n=n)
+                               stride=stride, pb=pb, wo=wo, n=n, bb=bb)
 
-    # same slab indexing as conv_window: element offsets for halo'd rows,
-    # one index map serving both pallas BlockSpec generations
-    slab_map = lambda bi, pi, mi: (bi, 0, pi * 2 * pb * sh, 0)  # noqa: E731
+    # same slab indexing as conv_window: element offsets for halo'd rows.
+    # The batch dim is a BB-image block; rows stay element-indexed.
     if hasattr(pl, "Squeezed"):          # newer pallas: per-dim block types
-        slab_spec = pl.BlockSpec((pl.Squeezed(), n, pl.Element(rows_in), w),
-                                 slab_map)
-        out_spec = pl.BlockSpec((pl.Squeezed(), mb, pb, wo // 2),
+        slab_spec = pl.BlockSpec((bb, n, pl.Element(rows_in), w),
+                                 lambda bi, pi, mi: (bi, 0, pi * 2 * pb * sh,
+                                                     0))
+        out_spec = pl.BlockSpec((bb, mb, pb, wo // 2),
                                 lambda bi, pi, mi: (bi, mi, pi, 0))
-    else:                                # jax 0.4.x: Unblocked + None-squeeze
-        slab_spec = pl.BlockSpec((None, n, rows_in, w), slab_map,
-                                 indexing_mode=pl.Unblocked())
-        out_spec = pl.BlockSpec((None, mb, pb, wo // 2),
+    else:                                # jax 0.4.x: Unblocked (element
+        slab_spec = pl.BlockSpec(        # offsets in every dim)
+            (bb, n, rows_in, w),
+            lambda bi, pi, mi: (bi * bb, 0, pi * 2 * pb * sh, 0),
+            indexing_mode=pl.Unblocked())
+        out_spec = pl.BlockSpec((bb, mb, pb, wo // 2),
                                 lambda bi, pi, mi: (bi, mi, pi, 0))
 
     return pl.pallas_call(

@@ -3,9 +3,13 @@
 Same conventions as kernels/conv_window/ops.py: weights flatten to the
 (η, M) layout (feature order N, Kh, Kw — the line-buffer stream order),
 the pooled-row count is padded to the block size when ragged (by extending
-the input with dead rows and slicing the pooled result), and tile sizes
-resolve through the shared policy/tiling layer (DESIGN.md §7): explicit
-kwargs > ``ExecPolicy.tiling`` > tuning cache > VMEM-budget heuristic.
+the input with dead rows and slicing the pooled result), the batch is
+padded to the batch block ``bb`` with dead images (sliced off the output),
+and tile sizes resolve through the shared policy/tiling layer (DESIGN.md
+§7): explicit kwargs > ``ExecPolicy.tiling`` > tuning cache > VMEM-budget
+heuristic. Under ``ExecPolicy.autotune`` a concrete (untraced) call with
+no cache entry first runs the measured candidate search
+(repro.ops.autotune) and the winner lands in the cache (DESIGN.md §10).
 
 Registered as the ``pallas`` backend of the ``fused_conv_block`` op family
 (repro.ops); its capability predicate requires even conv output dims (the
@@ -21,15 +25,16 @@ import jax.numpy as jnp
 
 from repro.kernels.fused_cwp.kernel import fused_cwp_pallas
 from repro.ops.policy import ExecPolicy, current_policy
-from repro.ops.tiling import choose_fused_blocks, largest_divisor, tile_params
+from repro.ops.tiling import (choose_fused_blocks, conv_signature,
+                              largest_divisor, tile_params)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("stride", "interpret", "pb", "mb"))
+                   static_argnames=("stride", "interpret", "pb", "mb", "bb"))
 def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None,
                    scale: jax.Array | None, *,
                    stride: tuple[int, int], interpret: bool,
-                   pb: int, mb: int) -> jax.Array:
+                   pb: int, mb: int, bb: int) -> jax.Array:
     bsz, n, h, wdt = x.shape
     m, n2, kh, kw = w.shape
     assert n == n2, (x.shape, w.shape)
@@ -42,6 +47,10 @@ def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None,
     pad_pool = (-po) % pb
     if pad_pool:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_pool * 2 * sh), (0, 0)))
+    # pad B to a multiple of bb with dead images, sliced off the output
+    pad_b = (-bsz) % bb
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0), (0, 0), (0, 0)))
 
     wf = w.reshape(m, n * kh * kw).T        # (η, M), feature order (N,Kh,Kw)
     bias = jnp.zeros((1, m), x.dtype) if b is None \
@@ -52,8 +61,9 @@ def _fused_cwp_jit(x: jax.Array, w: jax.Array, b: jax.Array | None,
         else scale.reshape(1, m).astype(jnp.float32)
 
     out = fused_cwp_pallas(x, wf.astype(x.dtype), s, bias, kh=kh, kw=kw,
-                           stride=stride, pb=pb, mb=mb, interpret=interpret)
-    return out[:, :, :po, :]
+                           stride=stride, pb=pb, mb=mb, bb=bb,
+                           interpret=interpret)
+    return out[:bsz, :, :po, :]
 
 
 def fused_conv_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
@@ -62,12 +72,14 @@ def fused_conv_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
                       scale: jax.Array | None = None,
                       interpret: bool | None = None,
                       pb: int | None = None, mb: int | None = None,
+                      bb: int | None = None,
                       policy: ExecPolicy | None = None) -> jax.Array:
     """Fused conv+[requant]+bias+relu+2×2 pool. x: (B,N,H,W), w:
     (M,N,Kh,Kw) -> (B,M,Ho/2,Wo/2). ``scale`` (M,) is the int8 requant
-    epilogue applied to the accumulator before bias/relu. Requires even
-    conv output dims (``odd`` modes other than even inputs are served by
-    the ref/xla backends)."""
+    epilogue applied to the accumulator before bias/relu. ``bb`` batches
+    images per grid step (one weight-tile DMA per BB images). Requires
+    even conv output dims (``odd`` modes other than even inputs are served
+    by the ref/xla backends)."""
     pol = policy if policy is not None else current_policy()
     if interpret is None:
         interpret = pol.resolve_interpret()
@@ -82,16 +94,25 @@ def fused_conv_window(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
             f"fused kernel needs even conv output dims, got {ho}x{wo}")
     defaults = choose_fused_blocks(n, h, wdt, m, kh, kw, tuple(stride),
                                    x.dtype.itemsize)
-    sig = (n, h, wdt, m, kh, kw, *stride)
+    sig = conv_signature(x.shape, w.shape, stride)
+    if (pol.autotune and pb is None and mb is None and bb is None
+            and not isinstance(x, jax.core.Tracer)):
+        from repro.ops.autotune import ensure_tuned  # lazy: cycle
+        ensure_tuned("fused_conv_block", x, w, b, stride=tuple(stride),
+                     scale=scale, policy=pol)
     tiles = tile_params("fused_conv_block", sig, x.dtype, defaults,
                         pol.tile_overrides)
     if pb is not None:
         tiles["pb"] = pb
     if mb is not None:
         tiles["mb"] = mb
-    # mb must divide M (grid constraint); pb is free — ragged Po is padded
+    if bb is not None:
+        tiles["bb"] = bb
+    # mb must divide M (grid constraint); pb and bb are free — ragged Po
+    # and B are padded
     tiles["mb"] = largest_divisor(m, tiles["mb"])
     tiles["pb"] = max(1, tiles["pb"])
+    tiles["bb"] = max(1, min(tiles["bb"], x.shape[0]))
     return _fused_cwp_jit(x, w, b, scale, stride=tuple(stride),
                           interpret=interpret, pb=tiles["pb"],
-                          mb=tiles["mb"])
+                          mb=tiles["mb"], bb=tiles["bb"])

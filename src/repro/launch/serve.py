@@ -20,26 +20,63 @@ import jax
 import numpy as np
 
 
+def _load_tuning_cache(path) -> None:
+    """``--tuning-cache`` load half: merge a persisted tuned-tile table
+    (benchmarks/op_sweep.py --out, or a previous --tuning-cache run) into
+    the process cache before any plan compiles. A missing file is fine —
+    first runs start empty; corrupt/unknown-version files warn and fall
+    back to heuristics inside ``TuningCache.load``."""
+    import os
+
+    from repro.ops import TUNING_CACHE
+    if not path:
+        return
+    if not os.path.exists(path):
+        print(f"tuning cache: {path} not found (starting empty)")
+        return
+    n = TUNING_CACHE.load(path)
+    print(f"tuning cache: loaded {n} entries from {path}")
+
+
+def _save_tuning_cache(path) -> None:
+    """``--tuning-cache`` save half: persist everything measured this
+    process (bind-time autotuning included) for the next one."""
+    from repro.ops import TUNING_CACHE
+    if not path:
+        return
+    TUNING_CACHE.save(path)
+    print(f"tuning cache: saved {len(TUNING_CACHE)} entries to {path}")
+
+
 def _serve_vision(spec, model, args) -> None:
-    """Micro-batched image serving through the compiled plan. An explicit
-    ``--mesh`` (e.g. ``1x2``: data×model) compiles the plan
+    """Micro-batched image serving through bucketed compiled plans. An
+    explicit ``--mesh`` (e.g. ``1x2``: data×model) compiles the plans
     channel-parallel (DESIGN.md §9); ``auto`` keeps the vision path
     single-device — the CNN is small enough that sharding is an explicit
-    operator choice, not a default."""
+    operator choice, not a default. ``--autotune`` measures tile winners
+    at bind time (or takes them from ``--tuning-cache``) and bakes them
+    into the served plans (DESIGN.md §10)."""
     from repro.launch.train import build_mesh
     from repro.serve.vision import VisionEngine, VisionEngineConfig
 
     mesh = None if args.mesh == "auto" else build_mesh(args.mesh)
     params = model.init(jax.random.PRNGKey(0))
-    engine = VisionEngine(model, params,
-                          VisionEngineConfig(batch=args.capacity, mesh=mesh))
+    engine = VisionEngine(
+        model, params,
+        VisionEngineConfig(batch=args.capacity, mesh=mesh,
+                           buckets=None if args.fixed_batch else "auto",
+                           autotune=args.autotune))
     plan = engine.plan
     sharded = "" if mesh is None else (
         f", {plan.num_sharded()} sharded stages over "
         f"mesh={dict(mesh.shape)}")
+    tuned = ""
+    if args.autotune:
+        baked = engine._bounds[args.capacity].tuned
+        tuned = f", {len(baked)} autotuned stages"
     print(f"arch={args.arch} vision path: compiled plan with "
           f"{plan.num_fused()} fused conv blocks, quant={plan.quant}"
-          f"{sharded}")
+          f"{sharded}{tuned}, batch buckets {list(engine.buckets)}")
 
     rng = np.random.RandomState(1)
     shape = model.input_shape()[1:]
@@ -52,10 +89,11 @@ def _serve_vision(spec, model, args) -> None:
 
     s = engine.stats
     print(f"served {len(results)} images in {wall:.2f}s "
-          f"({s.images_per_s:.1f} img/s) over {s.steps} fixed-shape "
-          f"batches of {args.capacity}")
+          f"({s.images_per_s:.1f} img/s) over {s.steps} bucket-shaped "
+          f"batches (max {args.capacity})")
     print(f"lane utilization {s.lane_utilization:.0%} "
-          f"({s.lane_steps} real + {s.pad_lanes} pad lanes)")
+          f"({s.lane_steps} real + {s.pad_lanes} pad lanes), "
+          f"pad_fraction={s.pad_fraction:.2f}")
     if results:
         sample = results[min(results)]
         print(f"sample prediction (request {min(results)}): "
@@ -75,6 +113,15 @@ def main() -> None:
     ap.add_argument("--kv-quant", choices=("none", "int8"), default="none")
     ap.add_argument("--mesh", default="auto")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="persisted tuned-tile table: load before "
+                         "compiling, save (merged) after serving")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure tile winners at plan bind time and bake "
+                         "them into the served plans (vision path)")
+    ap.add_argument("--fixed-batch", action="store_true",
+                    help="serve every micro-batch at the full --capacity "
+                         "shape (disable bucketed batch plans)")
     args = ap.parse_args()
 
     from repro.configs.registry import get_arch
@@ -82,10 +129,12 @@ def main() -> None:
     from repro.serve.engine import Engine, EngineConfig
     from repro.sharding.logical import DEFAULT_RULES, ShardingCtx
 
+    _load_tuning_cache(args.tuning_cache)
     spec = get_arch(args.arch)
     model = spec.model()
     if spec.family == "cnn":
         _serve_vision(spec, model, args)
+        _save_tuning_cache(args.tuning_cache)
         return
     if args.reduced:
         model = reduced_config(model)
@@ -132,6 +181,7 @@ def main() -> None:
     rejected = len(finished) - len(served)
     if rejected:
         print(f"rejected {rejected} requests (prompt > max_seq {max_seq})")
+    _save_tuning_cache(args.tuning_cache)
 
 
 if __name__ == "__main__":

@@ -151,7 +151,7 @@ class PaperCNN:
 
     def compile(self, policy: ExecPolicy | None = None, *,
                 fuse: bool = True, batch: int = 1,
-                mesh=None) -> "ExecutionPlan":
+                mesh=None, autotune: bool = False) -> "ExecutionPlan":
         """Lift this model into a fused, static ``ExecutionPlan``
         (repro.graph, DESIGN.md §8): trace → conv+relu+pool fusion →
         quantization lowering → DQE. Quant mode resolves now (``policy``
@@ -162,10 +162,15 @@ class PaperCNN:
         runs the channel-parallel placement pass (DESIGN.md §9): each
         conv stage gets the paper's ICP or OCP schedule from its channel
         counts (override via ``ExecPolicy.channel_parallel``) and
-        ``plan.bind`` places the weights shard-resident."""
+        ``plan.bind`` places the weights shard-resident.
+
+        ``autotune=True`` makes ``plan.bind`` measure tile candidates per
+        conv/fused/dense stage (DESIGN.md §10) and bake the winners into
+        the BoundPlan — serving then runs on measured tiles with no
+        re-tuning on the hot path."""
         from repro.graph.plan import compile_model
         return compile_model(self, self.input_shape(batch), policy=policy,
-                             fuse=fuse, mesh=mesh)
+                             fuse=fuse, mesh=mesh, autotune=autotune)
 
     def loss(self, params: dict, batch: dict, ctx=None
              ) -> tuple[jax.Array, dict]:

@@ -11,14 +11,17 @@ Layout:
   policy    — ExecPolicy + use_policy/current_policy (contextvar)
   registry  — OpRegistry: named backends, capability predicates,
               platform-aware auto-selection
-  tiling    — shared block-size heuristics + the (op, shape, dtype)
-              tuning cache (populated by benchmarks/op_sweep.py)
+  tiling    — shared block-size heuristics + the (op, shape, dtype,
+              platform) tuning cache with versioned JSON persistence
+  autotune  — measured candidate-grid search that populates the cache
+              (DESIGN.md §10; plan bind-time tuning and op_sweep)
   impls     — backend registrations + public entry points
   compat    — the legacy ``path=``/string shim (deprecated)
 """
 from repro.ops.policy import (BACKENDS, QUANT_MODES, ExecPolicy,
                               current_policy, default_interpret, use_policy)
 from repro.ops.tiling import TUNING_CACHE, TuningCache, tile_params
+from repro.ops.autotune import ensure_tuned, resolved_backend
 from repro.ops.registry import (REGISTRY, BackendUnavailableError, OpRegistry,
                                 dispatch, list_backends, list_ops, register)
 from repro.ops.impls import (causal_conv1d, conv2d, dense, fused_conv_block,
@@ -30,6 +33,7 @@ __all__ = [
     "BACKENDS", "QUANT_MODES", "ExecPolicy", "current_policy",
     "default_interpret", "use_policy",
     "TUNING_CACHE", "TuningCache", "tile_params",
+    "ensure_tuned", "resolved_backend",
     "REGISTRY", "BackendUnavailableError", "OpRegistry", "dispatch",
     "list_backends", "list_ops", "register",
     "causal_conv1d", "conv2d", "dense", "fused_conv_block", "qdense",

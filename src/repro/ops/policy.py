@@ -20,7 +20,13 @@ carrying
                     (paper §III.A via DESIGN.md §9): ``None`` auto-places
                     ICP/OCP per layer, ``"input"``/``"output"`` (aliases
                     ``icp``/``ocp``) force one schedule, ``"none"``
-                    disables channel sharding.
+                    disables channel sharding;
+  * ``autotune``  — measured tile selection (DESIGN.md §10): a concrete
+                    (untraced) kernel call with no tuning-cache entry
+                    first runs the candidate-grid search in
+                    ``repro.ops.autotune`` and caches the winner.
+                    Compiled plans tune at ``bind`` time instead and bake
+                    the winners into the BoundPlan.
 
 Policies nest via ``use_policy`` (a contextvar, so jit-trace-time dispatch
 and threaded engines both see the right one) and are hashable, so configs
@@ -68,6 +74,9 @@ class ExecPolicy:
     # force the paper's Eq. 7 / Eq. 6 schedule on every conv stage, and
     # "none" pins plans to replicated (data-parallel only) execution.
     channel_parallel: str | None = None
+    # measured tile selection: tune-on-first-use for eager concrete calls
+    # that miss the tuning cache (repro.ops.autotune, DESIGN.md §10)
+    autotune: bool = False
 
     def __post_init__(self):
         if self.backend is not None and self.backend not in BACKENDS:

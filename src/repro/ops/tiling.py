@@ -1,4 +1,5 @@
-"""Shared tile-size selection + the per-(op, shape, dtype) tuning cache.
+"""Shared tile-size selection + the per-(op, shape, dtype, platform) tuning
+cache.
 
 Every Pallas wrapper used to carry its own block chooser (``_choose_blocks``
 in conv_window, ``_pick_rb`` in addtree, ``_pick`` in qmatmul). They are
@@ -6,31 +7,48 @@ folded here so one layer owns the heuristics, and a measured tuning cache
 can override them uniformly:
 
     resolution order:  ExecPolicy.tiling overrides
-                     > TuningCache entry for (op, shape-sig, dtype)
+                     > TuningCache entry for (op, shape-sig, dtype, platform)
                      > analytic heuristic
 
-``benchmarks/op_sweep.py`` sweeps candidate tiles per op/shape and
-populates the cache (JSON on disk, ``REPRO_TUNING_CACHE`` env var or an
-explicit ``TUNING_CACHE.load(path)``). This is the software analogue of
-the FPGA design-space exploration step in the accelerator surveys
-(DESIGN.md §7).
+The cache is populated by *measurement*: ``repro.ops.autotune`` times a
+candidate grid per (op, shape, dtype) and writes the winner
+(``benchmarks/op_sweep.py`` and ``ExecutionPlan`` bind-time autotuning both
+route through it). This is the software analogue of the FPGA design-space
+exploration step in the accelerator surveys (DESIGN.md §7, §10).
+
+Persistence is a versioned JSON file (``SCHEMA_VERSION``): load-on-start via
+the ``REPRO_TUNING_CACHE`` env var or an explicit ``TUNING_CACHE.load(path)``
+(``--tuning-cache`` on ``launch/serve.py`` / ``benchmarks/run.py``).
+Corrupt or unknown-version files never poison a run — ``load`` warns and
+returns 0, leaving the analytic heuristics in charge.
 """
 from __future__ import annotations
 
 import json
 import os
 import pathlib
+import warnings
 from typing import Mapping
 
 import numpy as np
 
 __all__ = ["largest_divisor", "padded_block", "choose_conv_blocks",
            "choose_fused_blocks", "choose_qmatmul_blocks",
-           "choose_tree_rows", "TuningCache", "TUNING_CACHE", "tile_params"]
+           "choose_tree_rows", "TuningCache", "TUNING_CACHE", "tile_params",
+           "conv_signature", "SCHEMA_VERSION"]
 
 # VMEM working-set budget per grid step (v5e has 128 MiB VMEM per core;
 # stay well under to leave room for double buffering).
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+# version of the persisted tuning-cache JSON schema (bumped when the key or
+# row layout changes; older/newer files fall back to heuristics on load)
+SCHEMA_VERSION = 1
+
+
+def _platform() -> str:
+    import jax
+    return jax.default_backend()
 
 
 def largest_divisor(dim: int, cap: int) -> int:
@@ -51,13 +69,25 @@ def padded_block(dim: int, cap: int) -> tuple[int, int]:
     return block, padded
 
 
+def conv_signature(x_shape, w_shape, stride) -> tuple[int, ...]:
+    """The tuning-cache shape signature shared by the ``conv2d`` and
+    ``fused_conv_block`` wrappers and the autotuner:
+    (B, N, H, W, M, Kh, Kw, sh, sw). Batch is part of the key — the
+    batch-block candidate ``bb`` only makes sense per batch size."""
+    bsz, n, h, w = x_shape
+    m, _, kh, kw = w_shape
+    return (bsz, n, h, w, m, kh, kw, *stride)
+
+
 def choose_conv_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
                        stride: tuple[int, int], itemsize: int
                        ) -> dict[str, int]:
-    """Heuristic (rb, mb) for the window-stationary conv kernel.
+    """Heuristic (rb, mb, bb) for the window-stationary conv kernel.
 
     Budget: slab n*rows_in*w + im2col η*rb*wo + weights η*mb + out mb*rb*wo.
-    Prefer mb = min(m, 128) (MXU lane width) then grow rb.
+    Prefer mb = min(m, 128) (MXU lane width) then grow rb. ``bb`` (images
+    per grid step) stays 1 here — batching the grid trades VMEM for weight
+    reuse, a measured decision left to the autotuner (DESIGN.md §10).
     """
     sh, sw = stride
     ho = (h - kh) // sh + 1
@@ -73,16 +103,17 @@ def choose_conv_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
             best = rb
         else:
             break
-    return {"rb": best, "mb": mb}
+    return {"rb": best, "mb": mb, "bb": 1}
 
 
 def choose_fused_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
                         stride: tuple[int, int], itemsize: int
                         ) -> dict[str, int]:
-    """Heuristic (pb, mb) for the fused conv+relu+pool kernel
+    """Heuristic (pb, mb, bb) for the fused conv+relu+pool kernel
     (kernels/fused_cwp). ``pb`` counts *pooled* rows: one block covers
     2·pb conv rows, so the budget carries the pre-pool activation tile
-    (mb × 2·pb × wo) that fusion keeps out of HBM."""
+    (mb × 2·pb × wo) that fusion keeps out of HBM. ``bb`` defaults to 1
+    (see ``choose_conv_blocks``); the autotuner measures larger values."""
     sh, _ = stride
     ho = (h - kh) // sh + 1
     wo = (w - kw) // stride[1] + 1
@@ -100,7 +131,7 @@ def choose_fused_blocks(n: int, h: int, w: int, m: int, kh: int, kw: int,
             best = pb
         else:
             break
-    return {"pb": best, "mb": mb}
+    return {"pb": best, "mb": mb, "bb": 1}
 
 
 def choose_qmatmul_blocks(m: int, n: int, k: int) -> dict[str, int]:
@@ -126,21 +157,28 @@ def _dtype_name(dtype) -> str:
 
 
 class TuningCache:
-    """Measured tile parameters keyed by (op, shape signature, dtype)."""
+    """Measured tile parameters keyed by (op, shape signature, dtype,
+    platform). The platform key keeps a cache tuned on TPU from steering
+    CPU interpret runs and vice versa — entries only apply where they were
+    measured."""
 
     def __init__(self):
-        self._entries: dict[tuple[str, tuple[int, ...], str],
+        self._entries: dict[tuple[str, tuple[int, ...], str, str],
                             dict[str, int]] = {}
 
     @staticmethod
-    def key(op: str, shape, dtype) -> tuple[str, tuple[int, ...], str]:
-        return (op, tuple(int(s) for s in shape), _dtype_name(dtype))
+    def key(op: str, shape, dtype, platform: str | None = None
+            ) -> tuple[str, tuple[int, ...], str, str]:
+        return (op, tuple(int(s) for s in shape), _dtype_name(dtype),
+                platform or _platform())
 
-    def get(self, op: str, shape, dtype) -> dict[str, int] | None:
-        return self._entries.get(self.key(op, shape, dtype))
+    def get(self, op: str, shape, dtype,
+            platform: str | None = None) -> dict[str, int] | None:
+        return self._entries.get(self.key(op, shape, dtype, platform))
 
-    def put(self, op: str, shape, dtype, params: Mapping[str, int]) -> None:
-        self._entries[self.key(op, shape, dtype)] = {
+    def put(self, op: str, shape, dtype, params: Mapping[str, int],
+            platform: str | None = None) -> None:
+        self._entries[self.key(op, shape, dtype, platform)] = {
             k: int(v) for k, v in dict(params).items()}
 
     def clear(self) -> None:
@@ -149,18 +187,78 @@ class TuningCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def snapshot(self) -> dict:
+        """Copy of the entry table (tests save/restore around tuning)."""
+        return dict(self._entries)
+
+    def restore(self, entries: dict) -> None:
+        self._entries = dict(entries)
+
     # ---------- persistence ----------
     def save(self, path) -> None:
-        rows = [{"op": op, "shape": list(shape), "dtype": dt, "params": p}
-                for (op, shape, dt), p in sorted(self._entries.items())]
-        pathlib.Path(path).write_text(json.dumps(rows, indent=1) + "\n")
+        """Write the versioned JSON cache (schema ``SCHEMA_VERSION``)."""
+        rows = [{"op": op, "shape": list(shape), "dtype": dt,
+                 "platform": plat, "params": p}
+                for (op, shape, dt, plat), p in sorted(self._entries.items())]
+        doc = {"version": SCHEMA_VERSION, "entries": rows}
+        pathlib.Path(path).write_text(json.dumps(doc, indent=1) + "\n")
 
     def load(self, path) -> int:
-        """Merge entries from ``path``; returns how many were loaded."""
-        rows = json.loads(pathlib.Path(path).read_text())
+        """Merge entries from ``path``; returns how many were loaded.
+
+        Robust by design: a corrupt file, an unknown schema version, or
+        malformed rows warn and load nothing (heuristics stay in charge)
+        rather than raising mid-startup. Only a missing file raises — the
+        caller chose the path. The legacy un-versioned list format (PR 2)
+        is still accepted; rows without a platform field key under the
+        current platform.
+        """
+        text = pathlib.Path(path).read_text()
+        try:
+            doc = json.loads(text)
+        except json.JSONDecodeError:
+            warnings.warn(f"tuning cache {path}: corrupt JSON; falling back "
+                          f"to heuristic tiles", stacklevel=2)
+            return 0
+        legacy = False
+        if isinstance(doc, dict):
+            if doc.get("version") != SCHEMA_VERSION:
+                warnings.warn(
+                    f"tuning cache {path}: unknown schema version "
+                    f"{doc.get('version')!r} (this build reads "
+                    f"{SCHEMA_VERSION}); falling back to heuristic tiles",
+                    stacklevel=2)
+                return 0
+            rows = doc.get("entries", [])
+        elif isinstance(doc, list):     # legacy PR-2 format
+            rows = doc
+            legacy = True
+        else:
+            warnings.warn(f"tuning cache {path}: expected a JSON object or "
+                          f"list, got {type(doc).__name__}; falling back to "
+                          f"heuristic tiles", stacklevel=2)
+            return 0
+        loaded = 0
         for row in rows:
-            self.put(row["op"], row["shape"], row["dtype"], row["params"])
-        return len(rows)
+            try:
+                op, shape = row["op"], row["shape"]
+                if (legacy and op in ("conv2d", "fused_conv_block")
+                        and len(shape) != 9):
+                    # pre-batch-signature conv entries (PR 2 wrote
+                    # 8-element sigs) can never match a lookup now —
+                    # don't pretend they loaded
+                    warnings.warn(
+                        f"tuning cache {path}: skipping stale {op} entry "
+                        f"with pre-batch signature {shape} (re-tune to "
+                        f"refresh)", stacklevel=2)
+                    continue
+                self.put(op, shape, row["dtype"], row["params"],
+                         platform=row.get("platform"))
+                loaded += 1
+            except (KeyError, TypeError, ValueError):
+                warnings.warn(f"tuning cache {path}: skipping malformed "
+                              f"row {row!r}", stacklevel=2)
+        return loaded
 
 
 TUNING_CACHE = TuningCache()
@@ -171,10 +269,11 @@ def tile_params(op: str, shape, dtype, defaults: Mapping[str, int],
     """Resolve tile parameters for one op call.
 
     ``defaults`` come from the analytic heuristic; a tuning-cache entry for
-    (op, shape, dtype) refines them; ``overrides`` (ExecPolicy.tiling) win
-    outright. Override keys may be namespaced ``"<op>.<key>"`` to target a
-    single op family; bare keys apply to any op that understands them.
-    Unknown keys are ignored so one policy can carry tiles for several ops.
+    (op, shape, dtype, platform) refines them; ``overrides``
+    (ExecPolicy.tiling) win outright. Override keys may be namespaced
+    ``"<op>.<key>"`` to target a single op family; bare keys apply to any
+    op that understands them. Unknown keys are ignored so one policy can
+    carry tiles for several ops.
     """
     merged = dict(defaults)
     hit = TUNING_CACHE.get(op, shape, dtype)

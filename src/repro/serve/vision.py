@@ -1,21 +1,32 @@
-"""Vision serving: fixed-batch image inference over a compiled plan.
+"""Vision serving: bucketed micro-batch image inference over compiled plans.
 
 The LM engine (repro.serve.engine, DESIGN.md §6) keeps ONE compiled decode
 program and scales throughput with occupancy. This is the same argument
 for the paper's own workload — image classification: requests are
 micro-batched into a **fixed** batch shape and pushed through the fused
 ``ExecutionPlan`` from the graph compiler (repro.graph, DESIGN.md §8), so
-there is exactly one compiled program regardless of queue depth, and the
-deep pipeline inside the plan (fused conv blocks) does the per-image work
-without HBM round-trips between conv/relu/pool.
+there is a small static set of compiled programs regardless of queue
+depth, and the deep pipeline inside the plan (fused conv blocks) does the
+per-image work without HBM round-trips between conv/relu/pool.
+
+``VisionEngineConfig.buckets`` adds **bucketed batch plans**: instead of
+padding every short batch to the one full compiled shape (paying dead pad
+lanes), the engine keeps a plan cache keyed by padded batch bucket (e.g.
+1/2/4/8 for ``batch=8``) and serves each micro-batch through the smallest
+bucket that fits — short tails stop paying full-batch pad lanes. Buckets
+compile lazily on first use; ``VisionStats.pad_fraction`` makes the win
+visible (surfaced by ``benchmarks/serve_throughput.py``).
 
 The plan is ``bind``-ed to the params at engine construction: weight
 quantization (int8 scales, Qm.n snapping) is folded once — the serving
 analogue of flashing the bitstream before traffic arrives. With
 ``VisionEngineConfig.mesh`` the plan is additionally compiled
 channel-parallel (ICP/OCP per conv stage, DESIGN.md §9) and the bind
-places each stage's weights shard-resident, so serving traffic runs the
-paper's §III.A parallelism through the same single compiled program.
+places each stage's weights shard-resident. With
+``VisionEngineConfig.autotune`` each bucket's bind measures tile
+candidates (or takes them from a persisted tuning cache) and bakes the
+winners into the bound plan (DESIGN.md §10) — serving traffic never
+re-tunes.
 """
 from __future__ import annotations
 
@@ -34,7 +45,7 @@ __all__ = ["VisionEngineConfig", "VisionStats", "VisionEngine"]
 
 @dataclass(frozen=True)
 class VisionEngineConfig:
-    batch: int = 8                    # the one compiled batch shape
+    batch: int = 8                    # the largest compiled batch shape
     # None follows the normal compile() precedence (model-config policy,
     # then ambient use_policy); set to pin a serving policy explicitly
     policy: ExecPolicy | None = None
@@ -43,6 +54,14 @@ class VisionEngineConfig:
     # with ICP/OCP placement and bind weights shard-resident. None
     # serves single-device.
     mesh: object | None = None
+    # bucketed batch plans: None serves every micro-batch at the one
+    # ``batch`` shape (the pre-bucketing behavior); "auto" compiles
+    # power-of-two buckets up to ``batch``; an explicit tuple pins the
+    # bucket ladder (must include ``batch``). On a mesh with a ``data``
+    # axis, buckets that don't divide it are dropped.
+    buckets: tuple[int, ...] | str | None = None
+    # measured tile selection at bind time (DESIGN.md §10)
+    autotune: bool = False
 
 
 @dataclass
@@ -67,35 +86,92 @@ class VisionStats:
         issued = self.lane_steps + self.pad_lanes
         return self.lane_steps / issued if issued else 0.0
 
+    @property
+    def pad_fraction(self) -> float:
+        """Fraction of issued lanes that were dead padding — the cost
+        bucketed batch plans exist to shrink."""
+        issued = self.lane_steps + self.pad_lanes
+        return self.pad_lanes / issued if issued else 0.0
+
 
 class VisionEngine:
     """Micro-batching classifier over ``model.compile()``.
 
     The model must expose ``compile(policy=..., fuse=..., batch=...)``
-    and ``input_shape(batch)`` (PaperCNN does). Short final batches are
-    padded to the fixed shape and the pad lanes discarded host-side —
-    one XLA program, occupancy-scaled throughput.
+    and ``input_shape(batch)`` (PaperCNN does). Short batches pad to the
+    smallest compiled bucket that fits (the full ``batch`` shape when
+    bucketing is off) and the pad lanes are discarded host-side — a
+    bounded set of XLA programs, occupancy-scaled throughput.
     """
 
     def __init__(self, model, params,
                  config: VisionEngineConfig = VisionEngineConfig()):
         self.model = model
         self.config = config
+        self._params = params
         mesh = config.mesh
-        if mesh is not None and "data" in mesh.axis_names \
-                and config.batch % mesh.shape["data"]:
-            raise ValueError(
-                f"batch {config.batch} does not divide the mesh's data "
-                f"axis ({mesh.shape['data']} devices); the compiled batch "
-                f"shape is sharded over it — pick a divisible batch")
-        self.plan = model.compile(policy=config.policy, fuse=config.fuse,
-                                  batch=config.batch, mesh=mesh)
-        self._bound = self.plan.bind(params)
-        self._step = jax.jit(lambda x: self._bound(x))
+        self._data_div = 1
+        if mesh is not None and "data" in mesh.axis_names:
+            self._data_div = mesh.shape["data"]
+            if config.batch % self._data_div:
+                raise ValueError(
+                    f"batch {config.batch} does not divide the mesh's data "
+                    f"axis ({self._data_div} devices); the compiled batch "
+                    f"shape is sharded over it — pick a divisible batch")
+        self.buckets = self._resolve_buckets(config)
+        self._steps: dict[int, object] = {}     # bucket -> jitted bound call
+        self._bounds: dict[int, object] = {}    # bucket -> BoundPlan
+        # the full-batch plan compiles eagerly (it is the steady-state
+        # program; buckets below it compile lazily on first short batch)
+        self.plan = self._compile_bucket(config.batch)
         self.stats = VisionStats()
         self._queue: deque[tuple[int, np.ndarray]] = deque()
         self.results: dict[int, dict] = {}
         self._uid = 0
+
+    def _resolve_buckets(self, config: VisionEngineConfig
+                         ) -> tuple[int, ...]:
+        if config.buckets is None:
+            return (config.batch,)
+        if config.buckets == "auto":
+            ladder = []
+            b = 1
+            while b < config.batch:
+                ladder.append(b)
+                b *= 2
+            ladder.append(config.batch)
+        else:
+            ladder = sorted(set(int(b) for b in config.buckets))
+            if not ladder or ladder[-1] != config.batch:
+                raise ValueError(
+                    f"buckets {config.buckets} must include the full "
+                    f"batch {config.batch} (it serves saturated traffic)")
+        return tuple(b for b in ladder
+                     if b % self._data_div == 0) or (config.batch,)
+
+    def _compile_bucket(self, bucket: int):
+        """Compile + bind + jit + warm the plan for one padded batch
+        shape. The warm call traces/compiles the XLA program here, so
+        one-time compile (and bind-time autotune measurement) cost never
+        lands in a timed serving step — ``VisionStats.wall_s`` measures
+        serving only."""
+        plan = self.model.compile(policy=self.config.policy,
+                                  fuse=self.config.fuse, batch=bucket,
+                                  mesh=self.config.mesh,
+                                  autotune=self.config.autotune)
+        bound = plan.bind(self._params)
+        self._bounds[bucket] = bound
+        self._steps[bucket] = jax.jit(lambda x: bound(x))
+        warm = jnp.zeros((bucket, *self.model.input_shape()[1:]),
+                         jnp.float32)
+        jax.block_until_ready(self._steps[bucket](warm))
+        return plan
+
+    def _bucket_for(self, k: int) -> int:
+        for b in self.buckets:
+            if b >= k:
+                return b
+        return self.buckets[-1]
 
     # ---------- request intake ----------
     def submit(self, image) -> int:
@@ -112,30 +188,33 @@ class VisionEngine:
 
     # ---------- driving ----------
     def step(self) -> int:
-        """Serve one fixed-shape batch from the queue; returns how many
+        """Serve one bucket-shaped batch from the queue; returns how many
         real images it carried."""
         if not self._queue:
             return 0
-        t0 = time.perf_counter()
-        b = self.config.batch
         uids, imgs = [], []
-        while self._queue and len(uids) < b:
+        while self._queue and len(uids) < self.config.batch:
             uid, img = self._queue.popleft()
             uids.append(uid)
             imgs.append(img)
+        bucket = self._bucket_for(len(uids))
+        if bucket not in self._steps:   # one-time, outside the timed step
+            self._compile_bucket(bucket)
+        t0 = time.perf_counter()
         batch = np.stack(imgs)
-        if len(uids) < b:                       # pad to the compiled shape
-            pad = np.zeros((b - len(uids), *batch.shape[1:]), np.float32)
+        if len(uids) < bucket:              # pad to the bucket shape
+            pad = np.zeros((bucket - len(uids), *batch.shape[1:]),
+                           np.float32)
             batch = np.concatenate([batch, pad])
         logits = np.asarray(jax.device_get(
-            self._step(jnp.asarray(batch))))
+            self._steps[bucket](jnp.asarray(batch))))
         for i, uid in enumerate(uids):
             self.results[uid] = {"label": int(logits[i].argmax()),
                                  "logits": logits[i]}
         self.stats.steps += 1
         self.stats.images += len(uids)
         self.stats.lane_steps += len(uids)          # real work only
-        self.stats.pad_lanes += b - len(uids)       # issued, not served
+        self.stats.pad_lanes += bucket - len(uids)  # issued, not served
         self.stats.wall_s += time.perf_counter() - t0
         return len(uids)
 
