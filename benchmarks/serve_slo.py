@@ -1,0 +1,238 @@
+"""Poisson open-loop SLO benchmark: latency percentiles and goodput for
+both serving paths through the unified front-end (DESIGN.md §11).
+
+Every other serving benchmark in this repo is closed-loop (submit
+everything, drain, divide) — it measures *capacity*, not *latency*. This
+one drives the front-end the way traffic actually arrives: a seeded
+Poisson process (exponential inter-arrival gaps) submits requests at
+their scheduled times whether or not the engine has caught up, and every
+request carries an SLO deadline. What comes out is the serving curve the
+surveys say host scheduling decides: p50/p95/p99 latency, deadline-miss
+rate, and goodput (completed-within-deadline per second) — for the LM
+slot engine and the vision bucket engine, through the same
+``Frontend``/``OpenLoopDriver`` stack.
+
+Two clock modes, same workload, same code path:
+
+* **wall** (default) — real engines under ``MonotonicClock``: honest
+  measured latency on this host. This is what lands in
+  ``BENCH_slo.json``.
+* **``--virtual``** — ``VirtualClock`` + a fixed per-step service cost:
+  a deterministic discrete-event simulation of the scheduler itself
+  (same seed → bitwise-identical percentiles, any host). This mode is
+  the replayable record scheduling changes can be diffed against.
+
+Compiles are warmed out of band (``warm_prefill`` / ``VisionEngine
+.warm``) so no request's latency pays a one-time XLA compile.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.models.transformer import LMConfig, TransformerLM
+from repro.serve import (Engine, EngineConfig, EngineStats, Frontend,
+                         FrontendConfig, LMAdapter, MonotonicClock,
+                         OpenLoopDriver, VirtualClock, VisionAdapter,
+                         VisionEngine, VisionEngineConfig, VisionStats)
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_slo.json"
+
+# LM workload: mixed prompt lengths, jittered decode budgets
+LM_N, LM_RATE_RPS, LM_SLO_MS = 32, 25.0, 1500.0
+LM_CAPACITY, LM_PROMPTS, LM_MAX_NEW = 4, (4, 8), (3, 6)
+# vision workload: single-image requests into bucketed batch plans
+VIS_N, VIS_RATE_RPS, VIS_SLO_MS = 32, 150.0, 250.0
+VIS_BATCH = 4
+MAX_QUEUE = 64
+VIRTUAL_STEP_COST_S = 0.01       # simulated service time per engine step
+
+REQUIRED_KEYS = ("submitted", "completed", "rejected", "deadline_misses",
+                 "miss_rate", "p50_ms", "p95_ms", "p99_ms", "goodput_rps",
+                 "span_s", "items", "lane_utilization", "rate_rps",
+                 "slo_ms")
+
+
+def _poisson_times(rng: np.random.RandomState, n: int,
+                   rate_rps: float) -> np.ndarray:
+    """n arrival times of a rate-``rate_rps`` Poisson process (seconds)."""
+    return np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+
+
+def _record(stats, driver, *, rate_rps: float, slo_ms: float) -> dict:
+    return {
+        "submitted": stats.submitted,
+        "completed": stats.completed,
+        "rejected": stats.rejected,
+        "deadline_misses": stats.deadline_misses,
+        "miss_rate": round(stats.miss_rate, 4),
+        "p50_ms": round(stats.p50_s * 1e3, 3),
+        "p95_ms": round(stats.p95_s * 1e3, 3),
+        "p99_ms": round(stats.p99_s * 1e3, 3),
+        "goodput_rps": round(stats.goodput_rps, 3),
+        "span_s": round(stats.span_s, 4),
+        "items": stats.items,
+        "lane_utilization": round(stats.lane_utilization, 4),
+        "rate_rps": rate_rps,
+        "slo_ms": slo_ms,
+        "shed_arrivals": len(driver.shed),
+    }
+
+
+def _emit(path: str, mode: str, rec: dict) -> None:
+    emit(f"serve_slo/{path}_{mode}", rec["p50_ms"] * 1e3,
+         f"p95_ms={rec['p95_ms']:.1f} p99_ms={rec['p99_ms']:.1f} "
+         f"goodput_rps={rec['goodput_rps']:.1f} "
+         f"miss_rate={rec['miss_rate']:.2f} "
+         f"completed={rec['completed']}/{rec['submitted']}")
+
+
+def lm_section(*, n: int = LM_N, rate_rps: float = LM_RATE_RPS,
+               slo_ms: float = LM_SLO_MS, seed: int = 0,
+               virtual: bool = False) -> dict:
+    cfg = LMConfig(name="slo-bench", n_layers=2, d_model=128, n_heads=4,
+                   n_kv_heads=2, d_ff=256, vocab=256, dtype=jnp.float32,
+                   remat="none")
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    clock = VirtualClock() if virtual else MonotonicClock()
+    max_seq = max(LM_PROMPTS) + max(LM_MAX_NEW)
+    engine = Engine(model, params,
+                    EngineConfig(capacity=LM_CAPACITY, max_seq=max_seq),
+                    clock=clock)
+    # warm every program the workload will hit, outside measured latency
+    for plen in LM_PROMPTS:
+        engine.warm_prefill(plen)
+    engine.add_request(np.ones(LM_PROMPTS[0], np.int32), 2)
+    engine.run()                        # compiles the batched decode step
+    engine.finished.clear()
+    engine.stats = EngineStats()
+
+    rng = np.random.RandomState(seed)
+    times = _poisson_times(rng, n, rate_rps)
+    arrivals = []
+    for t in times:
+        plen = int(rng.choice(LM_PROMPTS))
+        budget = int(rng.randint(LM_MAX_NEW[0], LM_MAX_NEW[1] + 1))
+        arrivals.append((float(t), rng.randint(0, cfg.vocab, size=plen),
+                         {"max_new_tokens": budget}))
+
+    fe = Frontend(LMAdapter(engine),
+                  FrontendConfig(max_queue=MAX_QUEUE, slo_s=slo_ms / 1e3,
+                                 step_cost_s=(VIRTUAL_STEP_COST_S
+                                              if virtual else None)),
+                  clock)
+    driver = OpenLoopDriver(fe, arrivals)
+    driver.run()
+    return _record(fe.stats, driver, rate_rps=rate_rps, slo_ms=slo_ms)
+
+
+def vision_section(*, n: int = VIS_N, rate_rps: float = VIS_RATE_RPS,
+                   slo_ms: float = VIS_SLO_MS, seed: int = 0,
+                   virtual: bool = False) -> dict:
+    model = PaperCNN(PaperCNNConfig())
+    params = model.init(jax.random.PRNGKey(0))
+    clock = VirtualClock() if virtual else MonotonicClock()
+    engine = VisionEngine(model, params,
+                          VisionEngineConfig(batch=VIS_BATCH,
+                                             buckets="auto"),
+                          clock=clock)
+    engine.warm()                       # all buckets compiled, untimed
+    engine.stats = VisionStats()
+
+    rng = np.random.RandomState(seed)
+    shape = model.input_shape()[1:]
+    arrivals = [(float(t), rng.randn(*shape).astype(np.float32), {})
+                for t in _poisson_times(rng, n, rate_rps)]
+
+    fe = Frontend(VisionAdapter(engine),
+                  FrontendConfig(max_queue=MAX_QUEUE, slo_s=slo_ms / 1e3,
+                                 step_cost_s=(VIRTUAL_STEP_COST_S
+                                              if virtual else None)),
+                  clock)
+    driver = OpenLoopDriver(fe, arrivals)
+    driver.run()
+    return _record(fe.stats, driver, rate_rps=rate_rps, slo_ms=slo_ms)
+
+
+def check_schema(point: dict) -> None:
+    """Assert the BENCH_slo.json point shape (the check.sh smoke gate)."""
+    for path in ("lm", "vision"):
+        assert path in point, f"missing section {path!r}"
+        missing = [k for k in REQUIRED_KEYS if k not in point[path]]
+        assert not missing, f"{path} section missing keys: {missing}"
+        assert point[path]["completed"] > 0, f"{path}: nothing completed"
+
+
+def bench_point(*, smoke: bool = False, virtual: bool = False,
+                seed: int = 0) -> dict:
+    mode = "virtual" if virtual else "wall"
+    kw = dict(seed=seed, virtual=virtual)
+    if smoke:       # tiny load: exercise the whole stack, not the host
+        lm = lm_section(n=6, rate_rps=100.0, **kw)
+        vis = vision_section(n=8, rate_rps=400.0, **kw)
+    else:
+        lm = lm_section(**kw)
+        vis = vision_section(**kw)
+    _emit("lm", mode, lm)
+    _emit("vision", mode, vis)
+    return {
+        "bench": "serve_slo",
+        "schema": 1,
+        "mode": mode,
+        "seed": seed,
+        "smoke": smoke,
+        "platform": jax.default_backend(),
+        "lm": lm,
+        "vision": vis,
+    }
+
+
+def write_point(point: dict, path: pathlib.Path = BENCH_JSON) -> None:
+    """Append to the trajectory file (one JSON list, like the other
+    BENCH_*.json records)."""
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(point)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+
+
+def run() -> None:
+    point = bench_point()
+    check_schema(point)
+    write_point(point)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny Poisson run for CI; asserts the JSON schema")
+    ap.add_argument("--virtual", action="store_true",
+                    help="VirtualClock + fixed step cost: deterministic "
+                         "scheduler simulation instead of wall latency")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_slo.json trajectory write")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the trajectory to PATH instead of "
+                         "BENCH_slo.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    point = bench_point(smoke=args.smoke, virtual=args.virtual,
+                        seed=args.seed)
+    check_schema(point)
+    if not args.no_json:
+        write_point(point, pathlib.Path(args.out) if args.out
+                    else BENCH_JSON)

@@ -51,6 +51,18 @@ PYTHONPATH=src python -m repro.launch.serve --arch mnist_cnn --capacity 4 \
 grep -q "tuning cache: loaded 1 entries" "$TUNE_TMP/serve.log"
 grep -q "autotuned stages" "$TUNE_TMP/serve.log"
 
+echo "== serve_slo smoke (front-end SLO bench, virtual clock, schema gate) =="
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serve_slo \
+  --smoke --virtual --out "$TUNE_TMP/slo.json"
+PYTHONPATH=src:. python - "$TUNE_TMP/slo.json" <<'PY'
+import json, sys
+from benchmarks.serve_slo import check_schema
+history = json.loads(open(sys.argv[1]).read())
+assert isinstance(history, list) and history, "BENCH_slo.json not a history list"
+check_schema(history[-1])
+print(f"BENCH_slo schema OK ({len(history)} point(s))")
+PY
+
 echo "== shard_sweep smoke (channel-parallel plans, 2 forced devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.shard_sweep --smoke --no-json

@@ -30,7 +30,15 @@ and
     ``src/repro/core/parallelism.py`` (the paper-Eq. 6/7 schedules) and
     ``src/repro/graph/`` (the compiler that routes placed stages there) —
     new channel-parallel conv paths must go through the placement pass
-    (DESIGN.md §9), not ad-hoc collectives.
+    (DESIGN.md §9), not ad-hoc collectives;
+and
+
+  * direct ``time.monotonic()`` / ``time.sleep()`` / ``time.time()`` /
+    ``time.perf_counter()`` calls anywhere in ``src/repro/serve/``
+    EXCEPT ``src/repro/serve/clock.py`` (the one sanctioned wrapper).
+    All serving-layer timing goes through the injectable Clock seam
+    (DESIGN.md §11) so the whole stack runs under virtual time in tests
+    — a raw clock read anywhere else silently breaks that determinism.
 
 Tests are exempt — they pin the compat/eager behavior on purpose.
 """
@@ -68,6 +76,12 @@ SHARD_WINDOW = 15                     # lines around shard_map( to scan
 SHARD_RE = re.compile(r"\bshard_map\s*\(")
 SHARD_CONV_RE = re.compile(
     r"""\b(conv2d\w*|fused_conv\w*|_conv)\s*\(|['"](conv2d|fused_conv_block)['"]""")
+
+# raw clock reads in the serving layer: the Clock seam (DESIGN.md §11) is
+# the only sanctioned wrapper around the time module there
+TIME_SCAN_PREFIX = "src/repro/serve/"
+TIME_ALLOWED_FILES = ("src/repro/serve/clock.py",)
+TIME_RE = re.compile(r"\btime\.(monotonic|sleep|time|perf_counter)\s*\(")
 
 
 def _chain_violations(rel: str, lines: list[str]) -> list[tuple]:
@@ -107,6 +121,13 @@ def main() -> int:
             if not rel.startswith(SHARD_ALLOWED_PREFIXES) \
                     and rel not in SHARD_ALLOWED_FILES:
                 violations.extend(_shard_conv_violations(rel, lines))
+            if rel.startswith(TIME_SCAN_PREFIX) \
+                    and rel not in TIME_ALLOWED_FILES:
+                for lineno, line in enumerate(lines, start=1):
+                    if TIME_RE.search(line):
+                        violations.append(
+                            (rel, lineno,
+                             "raw time.* in the serving layer", line.strip()))
             if rel.startswith(ALLOWED_PREFIXES) or rel in ALLOWED_FILES:
                 continue
             scanned += 1
@@ -120,8 +141,10 @@ def main() -> int:
             print(f"FAIL: {rel}:{lineno} [{label}] {line}")
         print("route execution choices through repro.ops ExecPolicy "
               "(DESIGN.md §7), conv pipelines through repro.graph / "
-              "fused_conv_block (DESIGN.md §8), and sharded convs through "
-              "core.parallelism via the placement pass (DESIGN.md §9)")
+              "fused_conv_block (DESIGN.md §8), sharded convs through "
+              "core.parallelism via the placement pass (DESIGN.md §9), "
+              "and serving-layer timing through the repro.serve.clock "
+              "Clock seam (DESIGN.md §11)")
         return 1
     print("dispatch gate OK")
     return 0

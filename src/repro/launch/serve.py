@@ -1,20 +1,19 @@
-"""Production serving launcher: ``--arch <id>`` behind the
-continuous-batching engine (repro.serve.engine, DESIGN.md §6), sharded over
-the mesh. ``--reduced`` runs a small same-family config on CPU.
+"""Production serving launcher: ``--arch <id>`` behind the unified
+serving front-end (repro.serve.frontend, DESIGN.md §11) — request-level
+intake with deadlines over the continuous-batching engine (DESIGN.md §6)
+or, for CNN-family archs, the bucketed vision engine (DESIGN.md §8).
+``--reduced`` runs a small same-family config on CPU.
 
-A synthetic open-loop workload (``--requests`` with mixed prompt/decode
-lengths) is pushed through the engine; the report shows the occupancy the
-scheduler sustained and the resulting request/token throughput.
-
-CNN-family archs (``--arch mnist_cnn``) take the vision path instead:
-requests are images, and serving runs the fused ``ExecutionPlan`` from
-the graph compiler at one fixed batch shape (repro.serve.vision,
-DESIGN.md §8).
+A synthetic workload (``--requests`` with mixed prompt/decode lengths) is
+submitted through the front-end with an optional ``--slo-ms`` deadline
+budget; the report shows sustained occupancy, throughput, and the SLO
+view (p50/p95/p99 latency, goodput, deadline-miss rate) from the unified
+``ServeStats``. ``--max-queue`` bounds intake — submits beyond it are
+refused with the typed ``QueueFullError`` and reported as rejected.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -48,24 +47,57 @@ def _save_tuning_cache(path) -> None:
     print(f"tuning cache: saved {len(TUNING_CACHE)} entries to {path}")
 
 
-def _serve_vision(spec, model, args) -> None:
-    """Micro-batched image serving through bucketed compiled plans. An
-    explicit ``--mesh`` (e.g. ``1x2``: data×model) compiles the plans
-    channel-parallel (DESIGN.md §9); ``auto`` keeps the vision path
-    single-device — the CNN is small enough that sharding is an explicit
-    operator choice, not a default. ``--autotune`` measures tile winners
-    at bind time (or takes them from ``--tuning-cache``) and bakes them
-    into the served plans (DESIGN.md §10)."""
-    from repro.launch.train import build_mesh
-    from repro.serve.vision import VisionEngine, VisionEngineConfig
+def _frontend(adapter, args, clock):
+    from repro.serve import Frontend, FrontendConfig
+    max_queue = args.max_queue or max(args.requests, 64)
+    slo_s = args.slo_ms / 1e3 if args.slo_ms else None
+    return Frontend(adapter, FrontendConfig(max_queue=max_queue,
+                                            slo_s=slo_s), clock)
 
+
+def _submit_all(frontend, payloads, **options) -> int:
+    """Submit everything; a full queue sheds (typed, counted) instead of
+    hanging — the launcher's workload is open-loop."""
+    from repro.serve import QueueFullError
+    shed = 0
+    for p in payloads:
+        try:
+            frontend.submit(p, **options)
+        except QueueFullError:
+            shed += 1
+    return shed
+
+
+def _print_slo(stats, args) -> None:
+    slo = f"{args.slo_ms:.0f}ms" if args.slo_ms else "none"
+    print(f"SLO (budget {slo}): p50={stats.p50_s * 1e3:.1f}ms "
+          f"p95={stats.p95_s * 1e3:.1f}ms p99={stats.p99_s * 1e3:.1f}ms | "
+          f"goodput {stats.goodput_rps:.2f} req/s | "
+          f"deadline misses {stats.deadline_misses}/{stats.completed} "
+          f"({stats.miss_rate:.0%}) | rejected at intake {stats.rejected}")
+
+
+def _serve_vision(spec, model, args) -> None:
+    """Micro-batched image serving through bucketed compiled plans behind
+    the front-end. An explicit ``--mesh`` (e.g. ``1x2``: data×model)
+    compiles the plans channel-parallel (DESIGN.md §9); ``auto`` keeps
+    the vision path single-device — the CNN is small enough that sharding
+    is an explicit operator choice, not a default. ``--autotune`` measures
+    tile winners at bind time (or takes them from ``--tuning-cache``) and
+    bakes them into the served plans (DESIGN.md §10)."""
+    from repro.launch.train import build_mesh
+    from repro.serve import (MonotonicClock, VisionAdapter, VisionEngine,
+                             VisionEngineConfig)
+
+    clock = MonotonicClock()
     mesh = None if args.mesh == "auto" else build_mesh(args.mesh)
     params = model.init(jax.random.PRNGKey(0))
     engine = VisionEngine(
         model, params,
         VisionEngineConfig(batch=args.capacity, mesh=mesh,
                            buckets=None if args.fixed_batch else "auto",
-                           autotune=args.autotune))
+                           autotune=args.autotune),
+        clock=clock)
     plan = engine.plan
     sharded = "" if mesh is None else (
         f", {plan.num_sharded()} sharded stages over "
@@ -77,15 +109,18 @@ def _serve_vision(spec, model, args) -> None:
     print(f"arch={args.arch} vision path: compiled plan with "
           f"{plan.num_fused()} fused conv blocks, quant={plan.quant}"
           f"{sharded}{tuned}, batch buckets {list(engine.buckets)}")
+    engine.warm()                       # compiles out of measured latency
 
+    frontend = _frontend(VisionAdapter(engine), args, clock)
     rng = np.random.RandomState(1)
     shape = model.input_shape()[1:]
-    for _ in range(args.requests):
-        engine.submit(rng.randn(*shape).astype(np.float32))
+    shed = _submit_all(frontend,
+                       (rng.randn(*shape).astype(np.float32)
+                        for _ in range(args.requests)))
 
-    t0 = time.perf_counter()
-    results = engine.run()
-    wall = time.perf_counter() - t0
+    t0 = clock.now()
+    results = frontend.run_until_drained()
+    wall = clock.now() - t0
 
     s = engine.stats
     print(f"served {len(results)} images in {wall:.2f}s "
@@ -94,6 +129,9 @@ def _serve_vision(spec, model, args) -> None:
     print(f"lane utilization {s.lane_utilization:.0%} "
           f"({s.lane_steps} real + {s.pad_lanes} pad lanes), "
           f"pad_fraction={s.pad_fraction:.2f}")
+    _print_slo(s, args)
+    if shed:
+        print(f"shed {shed} submissions at intake (queue full)")
     if results:
         sample = results[min(results)]
         print(f"sample prediction (request {min(results)}): "
@@ -113,6 +151,12 @@ def main() -> None:
     ap.add_argument("--kv-quant", choices=("none", "int8"), default="none")
     ap.add_argument("--mesh", default="auto")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency budget; completions past it "
+                         "count as deadline misses in the SLO report")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="front-end intake bound (0 = fit the workload); "
+                         "submits beyond it are refused, not queued")
     ap.add_argument("--tuning-cache", default=None, metavar="PATH",
                     help="persisted tuned-tile table: load before "
                          "compiling, save (merged) after serving")
@@ -126,7 +170,8 @@ def main() -> None:
 
     from repro.configs.registry import get_arch
     from repro.launch.train import build_mesh, reduced_config
-    from repro.serve.engine import Engine, EngineConfig
+    from repro.serve import (Engine, EngineConfig, LMAdapter,
+                             MonotonicClock)
     from repro.sharding.logical import DEFAULT_RULES, ShardingCtx
 
     _load_tuning_cache(args.tuning_cache)
@@ -144,24 +189,28 @@ def main() -> None:
         rules = rules.with_overrides(**spec.rule_overrides)
     ctx = ShardingCtx(mesh, rules)
 
+    clock = MonotonicClock()
     params = model.init(jax.random.PRNGKey(0))
     max_seq = args.max_seq or (args.prompt_len + args.decode_steps)
     engine = Engine(model, params,
                     EngineConfig(capacity=args.capacity, max_seq=max_seq,
                                  kv_quant=args.kv_quant),
-                    ctx)
+                    ctx, clock=clock)
+    frontend = _frontend(LMAdapter(engine), args, clock)
 
     # mixed-length synthetic workload: jittered prompts, fixed budget
     rng = np.random.RandomState(1)
     lens = rng.choice([args.prompt_len // 2, args.prompt_len],
                       size=args.requests)
-    for plen in lens:
-        prompt = rng.randint(0, model.cfg.vocab, size=int(plen))
-        engine.add_request(prompt, args.decode_steps)
+    shed = _submit_all(frontend,
+                       (rng.randint(0, model.cfg.vocab, size=int(plen))
+                        for plen in lens),
+                       max_new_tokens=args.decode_steps)
 
-    t0 = time.perf_counter()
-    finished = engine.run()
-    wall = time.perf_counter() - t0
+    t0 = clock.now()
+    results = frontend.run_until_drained()
+    wall = clock.now() - t0
+    finished = list(results.values())
 
     s = engine.stats
     total_tokens = s.prefill_tokens + s.decode_tokens
@@ -174,6 +223,9 @@ def main() -> None:
           f"| decode lane utilization {s.decode_utilization:.0%}")
     print(f"tokens: {s.prefill_tokens} prefill + {s.decode_tokens} decode "
           f"= {total_tokens} ({total_tokens / wall:.1f} tok/s)")
+    _print_slo(s, args)
+    if shed:
+        print(f"shed {shed} submissions at intake (queue full)")
     served = [r for r in finished if r.generated]
     if served:
         r0 = served[0]

@@ -1,15 +1,24 @@
-"""Serving subsystem: step factories + the continuous-batching engine.
+"""Serving subsystem: step factories, the continuous-batching engine, and
+the unified async front-end.
 
 See DESIGN.md §6 for the LM architecture (RequestQueue -> Scheduler ->
-SlotKVCache -> Engine) and benchmarks/serve_throughput.py for the
-occupancy-vs-throughput measurement. Vision workloads take the
-plan-compiled path instead (repro.serve.vision, DESIGN.md §8).
+SlotKVCache -> Engine), DESIGN.md §8 for the vision plan-compiled path
+(repro.serve.vision), and DESIGN.md §11 for the request-level front-end
+both engines plug into (SchedulerCore intake + SLO policy + Clock seam;
+``benchmarks/serve_slo.py`` measures its latency/goodput under a Poisson
+open-loop load).
 """
 from repro.serve.cache import SlotKVCache
+from repro.serve.clock import Clock, MonotonicClock, VirtualClock
 from repro.serve.engine import Engine, EngineConfig, EngineStats
-from repro.serve.queue import RequestQueue
+from repro.serve.frontend import (Frontend, FrontendConfig, LMAdapter,
+                                  OpenLoopDriver, SchedulerCore,
+                                  ServeRequest, ServeRequestState,
+                                  VisionAdapter)
+from repro.serve.queue import QueueFullError, RequestQueue
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Scheduler, SchedulerStats
+from repro.serve.stats import ServeStats, percentile
 from repro.serve.steps import (greedy_sample, make_decode_step,
                                make_prefill_step)
 from repro.serve.vision import VisionEngine, VisionEngineConfig, VisionStats

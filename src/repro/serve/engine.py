@@ -19,7 +19,6 @@ pipeline, not with recompiles.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -30,9 +29,11 @@ import numpy as np
 from repro.ops import ExecPolicy
 from repro.serve.cache import (SlotKVCache, _quantize_leaves,
                                dequantize_leaves)
+from repro.serve.clock import Clock, MonotonicClock
 from repro.serve.queue import RequestQueue
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Scheduler
+from repro.serve.stats import ServeStats
 from repro.serve.steps import make_decode_step, make_prefill_step
 
 __all__ = ["EngineConfig", "EngineStats", "Engine"]
@@ -44,6 +45,10 @@ class EngineConfig:
     max_seq: int = 256                # per-slot sequence budget
     kv_quant: str | None = None       # "none" | "int8"; None → from policy
     eos_token: int | None = None
+    # bound on the engine's internal admission queue: add_request raises
+    # the typed QueueFullError beyond it (backpressure, DESIGN.md §11).
+    # None = unbounded (the front-end does its own bounding).
+    max_queue: int | None = None
     # compute policy activated around prefill/decode (repro.ops,
     # DESIGN.md §7): backend preference, compute quant, tiling overrides
     policy: ExecPolicy = field(default_factory=ExecPolicy)
@@ -58,25 +63,34 @@ class EngineConfig:
 
 
 @dataclass
-class EngineStats:
-    steps: int = 0
+class EngineStats(ServeStats):
+    """LM view of the unified ``ServeStats`` (DESIGN.md §11): ``items``
+    counts tokens (prompt tokens prefilled + tokens decoded),
+    ``lane_steps`` counts active decode lanes (== decode tokens),
+    ``pad_lanes`` counts idle slots in issued decode steps. The pre-§11
+    field names survive as derived views."""
+
     prefills: int = 0
     prefill_tokens: int = 0
-    decode_tokens: int = 0            # tokens produced by active lanes
-    decode_lane_steps: int = 0        # capacity × decode steps (work issued)
-    wall_s: float = 0.0
+
+    @property
+    def decode_tokens(self) -> int:
+        """Tokens produced by active lanes == real decode lanes issued."""
+        return self.lane_steps
+
+    @property
+    def decode_lane_steps(self) -> int:
+        """capacity × decode steps (work issued, live or idle)."""
+        return self.lane_steps + self.pad_lanes
 
     @property
     def tokens_per_s(self) -> float:
-        total = self.prefill_tokens + self.decode_tokens
-        return total / self.wall_s if self.wall_s > 0 else 0.0
+        return self.items_per_s
 
     @property
     def decode_utilization(self) -> float:
         """Fraction of issued decode lanes that produced a kept token."""
-        if self.decode_lane_steps == 0:
-            return 0.0
-        return self.decode_tokens / self.decode_lane_steps
+        return self.lane_utilization
 
 
 class Engine:
@@ -88,11 +102,12 @@ class Engine:
     """
 
     def __init__(self, model, params: Any, config: EngineConfig = EngineConfig(),
-                 ctx=None):
+                 ctx=None, clock: Clock | None = None):
         self.model = model
         self.params = params
         self.config = config
-        self.queue = RequestQueue()
+        self.clock = clock if clock is not None else MonotonicClock()
+        self.queue = RequestQueue(maxlen=config.max_queue)
         self.scheduler = Scheduler(config.capacity)
         self.kv = SlotKVCache(model, config.capacity, config.max_seq,
                               quant=config.cache_quant)
@@ -162,6 +177,7 @@ class Engine:
             self._last_token[req.slot] = first
             self.stats.prefills += 1
             self.stats.prefill_tokens += p
+            self.stats.items += p
             self._maybe_finish(req.slot)
 
     def _decode_all(self) -> None:
@@ -173,13 +189,15 @@ class Engine:
         tok, state = out[0], out[1:]
         self.kv.set_device_state(*state)
         tok_host = np.asarray(jax.device_get(tok))
-        self.stats.decode_lane_steps += self.config.capacity
+        active = self.scheduler.num_running
+        self.stats.lane_steps += active                      # kept tokens
+        self.stats.pad_lanes += self.config.capacity - active  # idle slots
+        self.stats.items += active
         for slot, req in self.scheduler.running().items():
             t = int(tok_host[slot])
             req.generated.append(t)
             self._last_token[slot] = t
             self.kv.advance(slot)
-            self.stats.decode_tokens += 1
             self._maybe_finish(slot)
 
     def _maybe_finish(self, slot: int) -> None:
@@ -199,14 +217,14 @@ class Engine:
     def step(self) -> int:
         """One engine iteration: admit into free slots, then one batched
         decode step. Returns the number of requests finished so far."""
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         self._admit()
         # occupancy of the decode about to run — recorded before the
         # decode's own evictions so finished-this-step slots still count
         self.scheduler.tick()
         self._decode_all()
         self.stats.steps += 1
-        self.stats.wall_s += time.perf_counter() - t0
+        self.stats.wall_s += self.clock.now() - t0
         return len(self.finished)
 
     def run(self) -> list[Request]:

@@ -8,6 +8,12 @@ and the scheduler's whole job is to keep occupancy at C. Admission is FIFO
 (head-of-line from the ``RequestQueue``); eviction is immediate on finish,
 with the freed slot eligible for refill in the *same* engine step —
 in-flight batch refill, the continuous-batching property.
+
+Request-level ordering policy (deadlines, EDF, backpressure) lives one
+layer up in the front-end's ``SchedulerCore`` (repro.serve.frontend,
+DESIGN.md §11): the front-end injects at most ``free_slots`` requests per
+step in its chosen order, so this slot allocator stays a pure
+capacity/occupancy mechanism.
 """
 from __future__ import annotations
 

@@ -6,6 +6,10 @@ int8 KV cache plug in here: each factory accepts an ``ExecPolicy``
 (repro.ops, DESIGN.md §7) that is activated around the model call, so every
 registry-routed op inside the model (conv, dense/qmatmul, causal conv)
 follows it — no flag threading through model code.
+
+These factories are pure jitted functions and never read the clock; all
+serving-layer timing goes through the injectable Clock seam
+(repro.serve.clock, DESIGN.md §11) in the engine/front-end step loops.
 """
 from __future__ import annotations
 

@@ -30,7 +30,6 @@ re-tunes.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass
 
@@ -39,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ops import ExecPolicy
+from repro.serve.clock import Clock, MonotonicClock
+from repro.serve.stats import ServeStats
 
 __all__ = ["VisionEngineConfig", "VisionStats", "VisionEngine"]
 
@@ -65,33 +66,22 @@ class VisionEngineConfig:
 
 
 @dataclass
-class VisionStats:
-    steps: int = 0
-    images: int = 0                   # real images served
-    lane_steps: int = 0               # lanes that carried a real image
-    pad_lanes: int = 0                # dead lanes issued as batch padding
-    wall_s: float = 0.0
+class VisionStats(ServeStats):
+    """Vision view of the unified ``ServeStats`` (DESIGN.md §11):
+    ``items`` counts real images served (each occupying one lane, so
+    ``lane_steps == items``); ``pad_lanes`` counts dead batch-padding
+    lanes. Issued = real + pad: a short final batch still computes its
+    pad lanes, but they must never count as served work. The derived
+    occupancy views (``lane_utilization``, ``pad_fraction``) live on the
+    base class; the pre-§11 names survive as aliases."""
+
+    @property
+    def images(self) -> int:
+        return self.items
 
     @property
     def images_per_s(self) -> float:
-        return self.images / self.wall_s if self.wall_s > 0 else 0.0
-
-    @property
-    def lane_utilization(self) -> float:
-        """Fraction of issued lanes that carried a real image (the
-        occupancy argument, per-batch instead of per-slot). Issued =
-        real + pad: a short final batch still computes its pad lanes,
-        but they must never count as served work — ``lane_steps`` used
-        to include them, inflating throughput/occupancy reports."""
-        issued = self.lane_steps + self.pad_lanes
-        return self.lane_steps / issued if issued else 0.0
-
-    @property
-    def pad_fraction(self) -> float:
-        """Fraction of issued lanes that were dead padding — the cost
-        bucketed batch plans exist to shrink."""
-        issued = self.lane_steps + self.pad_lanes
-        return self.pad_lanes / issued if issued else 0.0
+        return self.items_per_s
 
 
 class VisionEngine:
@@ -105,9 +95,11 @@ class VisionEngine:
     """
 
     def __init__(self, model, params,
-                 config: VisionEngineConfig = VisionEngineConfig()):
+                 config: VisionEngineConfig = VisionEngineConfig(),
+                 clock: Clock | None = None):
         self.model = model
         self.config = config
+        self.clock = clock if clock is not None else MonotonicClock()
         self._params = params
         mesh = config.mesh
         self._data_div = 1
@@ -173,6 +165,15 @@ class VisionEngine:
                 return b
         return self.buckets[-1]
 
+    def warm(self) -> None:
+        """Compile every bucket in the ladder now. Lazy compiles already
+        happen outside the timed serving step, but a latency benchmark
+        (benchmarks/serve_slo.py) wants them out of *request latency*
+        too — a request must not pay a one-time compile in its p99."""
+        for b in self.buckets:
+            if b not in self._steps:
+                self._compile_bucket(b)
+
     # ---------- request intake ----------
     def submit(self, image) -> int:
         """Queue one (C, H, W) image; returns its request id."""
@@ -200,7 +201,7 @@ class VisionEngine:
         bucket = self._bucket_for(len(uids))
         if bucket not in self._steps:   # one-time, outside the timed step
             self._compile_bucket(bucket)
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         batch = np.stack(imgs)
         if len(uids) < bucket:              # pad to the bucket shape
             pad = np.zeros((bucket - len(uids), *batch.shape[1:]),
@@ -212,10 +213,10 @@ class VisionEngine:
             self.results[uid] = {"label": int(logits[i].argmax()),
                                  "logits": logits[i]}
         self.stats.steps += 1
-        self.stats.images += len(uids)
+        self.stats.items += len(uids)               # real images served
         self.stats.lane_steps += len(uids)          # real work only
         self.stats.pad_lanes += bucket - len(uids)  # issued, not served
-        self.stats.wall_s += time.perf_counter() - t0
+        self.stats.wall_s += self.clock.now() - t0
         return len(uids)
 
     def run(self) -> dict[int, dict]:

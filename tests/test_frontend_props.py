@@ -1,0 +1,156 @@
+"""Property suite for the serving front-end's ``SchedulerCore`` contract
+(DESIGN.md §11): conservation (no request lost or duplicated), bounded
+occupancy, termination without starvation, and EDF+FCFS dispatch order.
+
+Runs through the ``hypothesis_compat`` shim: with ``hypothesis``
+installed each property explores drawn workloads; without it the same
+property body sweeps a seeded batch of random workloads — the properties
+are checked either way (no skips), only the search strategy changes.
+Everything executes under ``VirtualClock`` against the stub adapters
+from ``tests/test_frontend_virtual`` — pure scheduling, no models, no
+``time.sleep``.
+"""
+import math
+from collections import defaultdict
+
+import numpy as np
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from test_frontend_virtual import BucketSimAdapter, SimAdapter
+
+from repro.serve import (Frontend, FrontendConfig, QueueFullError,
+                         VirtualClock)
+
+# a workload case: engine capacity + per-request (service steps, SLO)
+SLO_CHOICES = (0.02, 0.05, 0.1, math.inf)
+
+
+def _seeded_cases(n_cases=25, seed=0):
+    rng = np.random.RandomState(seed)
+    for _ in range(n_cases):
+        capacity = int(rng.randint(1, 5))
+        reqs = [(int(rng.randint(1, 4)), float(rng.choice(SLO_CHOICES)))
+                for _ in range(int(rng.randint(1, 13)))]
+        yield capacity, reqs
+
+
+if HAVE_HYPOTHESIS:
+    _REQ = st.tuples(st.integers(min_value=1, max_value=3),
+                     st.sampled_from(SLO_CHOICES))
+
+    def workload_property(fn):
+        """Each property takes (self, capacity, reqs)."""
+        return settings(max_examples=40, deadline=None)(
+            given(st.integers(min_value=1, max_value=4),
+                  st.lists(_REQ, min_size=1, max_size=12))(fn))
+else:
+    def workload_property(fn):
+        def sweep(self):
+            for capacity, reqs in _seeded_cases():
+                fn(self, capacity, reqs)
+        sweep.__name__ = fn.__name__
+        sweep.__doc__ = fn.__doc__
+        return sweep
+
+
+def _serve(capacity, reqs, max_queue=64, adapter=None):
+    """Submit the whole workload at t=0, drain it, return everything."""
+    sim = adapter if adapter is not None else SimAdapter(capacity)
+    fe = Frontend(sim, FrontendConfig(max_queue=max_queue,
+                                      step_cost_s=0.01), VirtualClock())
+    accepted, rejected = [], 0
+    for steps, slo in reqs:
+        try:
+            accepted.append(fe.submit(
+                object(), steps=steps,
+                slo_s=None if math.isinf(slo) else slo))
+        except QueueFullError:
+            rejected += 1
+    results = fe.run_until_drained(max_steps=10_000)
+    return fe, sim, accepted, rejected, results
+
+
+class TestConservation:
+    @workload_property
+    def test_no_request_lost_or_duplicated(self, capacity, reqs):
+        fe, sim, accepted, _, results = _serve(capacity, reqs)
+        assert sorted(results) == sorted(accepted)
+        assert len(sim.injected) == len(set(sim.injected)) == len(accepted)
+        assert fe.stats.completed == len(accepted)
+        assert len(fe.stats.latencies) == len(accepted)
+
+    @workload_property
+    def test_bounded_queue_conserves_every_submit(self, capacity, reqs):
+        """With a tight intake bound, every submit is either accepted
+        (and later completed) or refused with the typed error — the two
+        outcomes partition the workload exactly."""
+        fe, _, accepted, rejected, results = _serve(capacity, reqs,
+                                                    max_queue=2)
+        assert len(accepted) + rejected == len(reqs)
+        assert fe.stats.submitted == len(accepted)
+        assert fe.stats.rejected == rejected
+        assert sorted(results) == sorted(accepted)
+
+
+class TestOccupancy:
+    @workload_property
+    def test_never_exceeds_capacity(self, capacity, reqs):
+        # SimAdapter.inject also hard-asserts this invariant internally
+        _, sim, _, _, _ = _serve(capacity, reqs)
+        assert sim.max_occupancy <= capacity
+
+    @workload_property
+    def test_lane_accounting_closes(self, capacity, reqs):
+        """Issued lanes partition exactly into real work + padding, and
+        real work equals the workload's total service demand."""
+        fe, _, accepted, _, _ = _serve(capacity, reqs)
+        s = fe.stats
+        assert s.lane_steps + s.pad_lanes == s.steps * capacity
+        assert s.lane_steps == sum(steps for steps, _ in reqs)
+        assert 0.0 <= s.lane_utilization <= 1.0
+
+    @workload_property
+    def test_bucket_former_never_overfills(self, capacity, reqs):
+        fe, sim, accepted, _, results = _serve(
+            capacity, reqs, adapter=BucketSimAdapter(capacity))
+        s = fe.stats
+        assert sorted(results) == sorted(accepted)
+        assert s.lane_steps + s.pad_lanes == s.steps * capacity
+        assert s.lane_steps == len(accepted)    # one lane-step per request
+
+
+class TestTermination:
+    @workload_property
+    def test_drains_without_starvation(self, capacity, reqs):
+        """Every accepted request finishes (DONE, positive latency) in a
+        bounded number of scheduler iterations — nothing waits forever
+        behind tighter deadlines."""
+        fe, _, accepted, _, _ = _serve(capacity, reqs)
+        assert not fe.has_work()
+        for rid in accepted:
+            req = fe.requests[rid]
+            assert req.finish_t is not None
+            assert req.latency_s > 0.0
+
+
+class TestDispatchOrder:
+    @workload_property
+    def test_edf_order_exact(self, capacity, reqs):
+        """All requests queued before the first dispatch: the injection
+        sequence must be exactly the (deadline, seq) sort — EDF, with
+        arrival order breaking ties."""
+        fe, sim, accepted, _, _ = _serve(capacity, reqs)
+        expect = sorted(accepted,
+                        key=lambda r: (fe.requests[r].deadline_t, r))
+        assert sim.injected == expect
+
+    @workload_property
+    def test_fcfs_among_equal_deadlines(self, capacity, reqs):
+        fe, sim, accepted, _, _ = _serve(capacity, reqs)
+        pos = {rid: i for i, rid in enumerate(sim.injected)}
+        by_deadline = defaultdict(list)
+        for rid in accepted:                    # accepted is in seq order
+            by_deadline[fe.requests[rid].deadline_t].append(rid)
+        for group in by_deadline.values():
+            order = [pos[rid] for rid in group]
+            assert order == sorted(order)

@@ -1,0 +1,208 @@
+"""The unified front-end over the REAL engines (DESIGN.md §11): both the
+LM slot engine and the vision bucket engine serve through the same
+``Frontend``, populate every field of the unified ``ServeStats``, and
+produce token-for-token / label-for-label the same outputs as driving the
+engines directly. Timing runs through the Clock seam (``VirtualClock`` +
+a configured step cost), so even with real XLA programs underneath the
+latency accounting is deterministic — no wall-clock in any assertion.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.models.transformer import LMConfig, TransformerLM
+from repro.serve import (Engine, EngineConfig, Frontend, FrontendConfig,
+                         LMAdapter, QueueFullError, VirtualClock,
+                         VisionAdapter, VisionEngine, VisionEngineConfig)
+
+V = 64
+
+# every ServeStats field a full serving stack must populate: the engine
+# core plus the front-end request accounting (the §11 parity contract)
+STATS_FIELDS = ("steps", "items", "lane_steps", "wall_s",
+                "submitted", "completed", "latencies")
+# clock timestamps: populated means "set" — 0.0 is a valid virtual time
+STAMP_FIELDS = ("first_t", "last_t")
+
+
+def _lm_model():
+    cfg = LMConfig(name="fe", n_layers=2, d_model=32, n_heads=4,
+                   n_kv_heads=2, d_ff=64, vocab=V, dtype=jnp.float32,
+                   remat="none")
+    return TransformerLM(cfg)
+
+
+def _lm_stack(capacity=2, max_seq=12, max_queue=64, engine_queue=None):
+    model = _lm_model()
+    params = model.init(jax.random.PRNGKey(0))
+    clock = VirtualClock()
+    engine = Engine(model, params,
+                    EngineConfig(capacity=capacity, max_seq=max_seq,
+                                 max_queue=engine_queue),
+                    clock=clock)
+    fe = Frontend(LMAdapter(engine),
+                  FrontendConfig(max_queue=max_queue, slo_s=1.0,
+                                 step_cost_s=0.01), clock)
+    return model, params, engine, fe
+
+
+def _prompts(n, plen=4, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, V, size=plen) for _ in range(n)]
+
+
+def _assert_stats_populated(stats, capacity):
+    for name in STATS_FIELDS:
+        value = getattr(stats, name)
+        assert value, f"ServeStats.{name} not populated: {value!r}"
+    for name in STAMP_FIELDS:
+        assert getattr(stats, name) is not None, \
+            f"ServeStats.{name} not populated"
+    assert stats.pad_lanes >= 0
+    # fixed-shape engines issue exactly steps*capacity lanes; bucketed
+    # plans issue fewer (that is the point of the buckets)
+    assert 0 < stats.lane_steps + stats.pad_lanes <= stats.steps * capacity
+    assert len(stats.latencies) == stats.completed
+    assert all(lat > 0 for lat in stats.latencies)
+    assert stats.items_per_s > 0
+    assert 0.0 < stats.lane_utilization <= 1.0
+    assert stats.span_s > 0
+    assert stats.goodput_rps > 0
+
+
+class TestLMThroughFrontend:
+    def test_tokens_match_direct_engine_run(self):
+        """The front-end is pure scheduling: routing the same requests
+        through it must generate exactly the tokens the engine produces
+        when driven directly."""
+        prompts = _prompts(5)
+        budgets = [3, 4, 2, 4, 3]
+
+        model, params, engine, fe = _lm_stack()
+        rid_of = {fe.submit(p, max_new_tokens=b): i
+                  for i, (p, b) in enumerate(zip(prompts, budgets))}
+        results = fe.run_until_drained()
+        via_frontend = {rid_of[rid]: req.generated
+                        for rid, req in results.items()}
+
+        _, _, direct, _ = _lm_stack()
+        uid_of = {direct.add_request(p, b): i
+                  for i, (p, b) in enumerate(zip(prompts, budgets))}
+        via_engine = {uid_of[r.uid]: r.generated for r in direct.run()}
+
+        assert via_frontend == via_engine
+
+    def test_every_stats_field_populated(self):
+        _, _, engine, fe = _lm_stack()
+        for p in _prompts(4):
+            fe.submit(p, max_new_tokens=3)
+        fe.run_until_drained()
+        _assert_stats_populated(engine.stats, engine.config.capacity)
+        # LM view: items are tokens, lane_steps are decode tokens
+        assert engine.stats.prefills == 4
+        assert engine.stats.prefill_tokens == 4 * 4
+        assert engine.stats.decode_tokens == engine.stats.lane_steps
+        assert engine.stats.items == (engine.stats.prefill_tokens
+                                      + engine.stats.decode_tokens)
+        # front-end and engine share ONE stats object
+        assert fe.stats is engine.stats
+
+    def test_engine_bounded_queue_raises_typed(self):
+        # EngineConfig.max_queue: the engine's own admission queue is a
+        # backpressure point with the same typed error as the front-end
+        _, _, engine, _ = _lm_stack(engine_queue=2)
+        engine.add_request(np.zeros(4, np.int32), 2)
+        engine.add_request(np.zeros(4, np.int32), 2)
+        with pytest.raises(QueueFullError) as ei:
+            engine.add_request(np.zeros(4, np.int32), 2)
+        assert ei.value.maxlen == 2
+
+    def test_virtual_latencies_are_exact(self):
+        """capacity=2, 4 requests, 3 tokens each, 0.01s/step: the first
+        pair finishes after steps 1-2 (prefill token + 2 decodes), the
+        second pair two steps later — latencies are exact virtual values."""
+        _, _, _, fe = _lm_stack(capacity=2)
+        for p in _prompts(4):
+            fe.submit(p, max_new_tokens=3)
+        fe.run_until_drained()
+        assert fe.stats.latencies == pytest.approx([0.02, 0.02,
+                                                    0.04, 0.04])
+        assert fe.stats.deadline_misses == 0
+
+
+class TestVisionThroughFrontend:
+    @staticmethod
+    def _stack(batch=4):
+        model = PaperCNN(PaperCNNConfig())
+        params = model.init(jax.random.PRNGKey(0))
+        clock = VirtualClock()
+        engine = VisionEngine(model, params,
+                              VisionEngineConfig(batch=batch,
+                                                 buckets="auto"),
+                              clock=clock)
+        fe = Frontend(VisionAdapter(engine),
+                      FrontendConfig(max_queue=64, slo_s=1.0,
+                                     step_cost_s=0.01), clock)
+        return model, params, engine, fe
+
+    def test_labels_match_direct_engine_run(self):
+        model, params, engine, fe = self._stack()
+        rng = np.random.RandomState(0)
+        images = [rng.randn(*model.input_shape()[1:]).astype(np.float32)
+                  for _ in range(6)]
+        rid_of = {fe.submit(img): i for i, img in enumerate(images)}
+        results = fe.run_until_drained()
+        via_frontend = {rid_of[rid]: out["label"]
+                        for rid, out in results.items()}
+
+        _, _, direct, _ = self._stack()
+        uid_of = {direct.submit(img): i for i, img in enumerate(images)}
+        via_engine = {uid_of[uid]: out["label"]
+                      for uid, out in direct.run().items()}
+        assert via_frontend == via_engine
+
+    def test_every_stats_field_populated(self):
+        model, _, engine, fe = self._stack()
+        rng = np.random.RandomState(1)
+        for _ in range(6):
+            fe.submit(rng.randn(*model.input_shape()[1:])
+                      .astype(np.float32))
+        fe.run_until_drained()
+        _assert_stats_populated(engine.stats, engine.config.batch)
+        # vision view: items are images; 6 images over batch-4 buckets
+        # serve as 4 + 2 with the 2 landing in the 2-bucket (no padding)
+        assert engine.stats.images == 6
+        assert engine.stats.steps == 2
+        assert engine.stats.pad_lanes == 0
+        assert fe.stats is engine.stats
+
+    def test_stats_parity_between_engines(self):
+        """The §11 parity contract: both engine families populate the
+        SAME ServeStats surface — every unified field and derived view
+        reads back a real value from either stack."""
+        _, _, lm_engine, lm_fe = _lm_stack()
+        for p in _prompts(3):
+            lm_fe.submit(p, max_new_tokens=2)
+        lm_fe.run_until_drained()
+
+        model, _, vis_engine, vis_fe = self._stack(batch=2)
+        rng = np.random.RandomState(2)
+        for _ in range(3):
+            vis_fe.submit(rng.randn(*model.input_shape()[1:])
+                          .astype(np.float32))
+        vis_fe.run_until_drained()
+
+        for stats in (lm_engine.stats, vis_engine.stats):
+            for name in STATS_FIELDS:
+                assert getattr(stats, name), f"{type(stats).__name__}" \
+                    f".{name} unpopulated"
+            for name in STAMP_FIELDS:
+                assert getattr(stats, name) is not None, \
+                    f"{type(stats).__name__}.{name} unpopulated"
+            for derived in ("items_per_s", "lane_utilization",
+                            "pad_fraction", "span_s", "p50_s", "p95_s",
+                            "p99_s", "miss_rate", "goodput_rps"):
+                assert isinstance(getattr(stats, derived), float)
+        assert lm_engine.stats.completed == vis_engine.stats.completed == 3
