@@ -63,6 +63,70 @@ check_schema(history[-1])
 print(f"BENCH_slo schema OK ({len(history)} point(s))")
 PY
 
+echo "== plan-artifact smoke (cross-process save -> zero-derivation boot, bitwise parity) =="
+PYTHONPATH=src python - "$TUNE_TMP/plans" <<'PY'
+import sys
+import jax
+import numpy as np
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+m = PaperCNN(PaperCNNConfig())
+p = m.init(jax.random.PRNGKey(0))
+b = m.compile(batch=2).bind(p)
+x = jax.random.normal(jax.random.PRNGKey(1), (2, *m.input_shape()[1:]))
+fp = b.save(sys.argv[1] + "/bucket_2", input_shapes=[tuple(x.shape)])
+np.save(sys.argv[1] + "/want.npy", np.asarray(b(x)))
+print(f"saved plan artifact fingerprint={fp[:16]}")
+PY
+PYTHONPATH=src python - "$TUNE_TMP/plans" <<'PY'
+import sys
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.artifact import load_plan
+from repro.artifact.warmup import collect_warmup
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+m = PaperCNN(PaperCNNConfig())
+p = m.init(jax.random.PRNGKey(0))
+with collect_warmup() as rep:
+    art = load_plan(sys.argv[1] + "/bucket_2", params=p)
+assert rep.zero_compile(), "artifact boot ran derivation:\n" + rep.pretty()
+x = jax.random.normal(jax.random.PRNGKey(1), (2, *m.input_shape()[1:]))
+got = np.asarray(art.program(tuple(x.shape))(jnp.asarray(x)))
+np.testing.assert_array_equal(got, np.load(sys.argv[1] + "/want.npy"))
+assert art.restored_aot(tuple(x.shape)), "AOT executable did not restore"
+print("cross-process roundtrip: zero derivation, AOT restored, bitwise-equal")
+PY
+
+echo "== plan-artifact fallback gate (corrupt / unknown schema: warn, never crash) =="
+PYTHONPATH=src python - "$TUNE_TMP/plans" <<'PY'
+import json
+import shutil
+import sys
+import warnings
+from repro.artifact import PlanStore
+root = sys.argv[1]
+for case in ("corrupt", "badschema"):
+    shutil.copytree(f"{root}/bucket_2", f"{root}/{case}")
+mf = f"{root}/corrupt/manifest.json"
+open(mf, "w").write("{not json")
+mf = f"{root}/badschema/manifest.json"
+doc = json.load(open(mf))
+doc["schema_version"] = 999
+json.dump(doc, open(mf, "w"))
+store = PlanStore(root)
+for case in ("corrupt", "badschema"):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert store.load(case) is None, f"{case}: load did not fall back"
+    assert any("falling back" in str(x.message) for x in w), \
+        f"{case}: no fallback warning"
+print("corrupt + unknown-schema artifacts warn and fall back (no crash)")
+PY
+
+echo "== plan_boot smoke (cold-boot bench: modes bitwise-equal, schema gate) =="
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.plan_boot \
+  --smoke --no-json
+
 echo "== shard_sweep smoke (channel-parallel plans, 2 forced devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=2" \
   PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.shard_sweep --smoke --no-json

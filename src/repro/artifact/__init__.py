@@ -1,0 +1,49 @@
+"""Plan artifact store: compiled plans + AOT executables as versioned,
+persistable artifacts (DESIGN.md §12).
+
+Layout:
+  warmup      — time-to-ready phase attribution (trace/fuse/place/tune/
+                compile/artifact/first_dispatch), stdlib-only
+  ir_codec    — graph IR ↔ canonical JSON
+  fingerprint — content fingerprint (graph + quant + placement + tiles +
+                policy + mesh + weights + versions)
+  aot         — jax AOT lower/compile + executable (de)serialization +
+                the per-fingerprint in-process executable cache
+  store       — save_plan/load_plan, the PlanArtifact handle, and the
+                named PlanStore serving reads from
+
+Exports resolve lazily (PEP 562): ``repro.graph.plan`` imports
+``repro.artifact.warmup`` for its phase hooks while ``store`` imports
+``repro.graph.plan`` back — an eager ``__init__`` would make that a
+cycle.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "collect_warmup": "warmup", "phase": "warmup", "WarmupReport": "warmup",
+    "current_report": "warmup", "PHASES": "warmup",
+    "graph_to_doc": "ir_codec", "graph_from_doc": "ir_codec",
+    "plan_fingerprint": "fingerprint", "params_digest": "fingerprint",
+    "SCHEMA_VERSION": "fingerprint",
+    "AOTMismatchError": "aot", "aot_compile": "aot",
+    "serialize_compiled": "aot", "deserialize_compiled": "aot",
+    "clear_executable_cache": "aot",
+    "ArtifactError": "store", "ArtifactStaleError": "store",
+    "PlanArtifact": "store", "PlanStore": "store",
+    "save_plan": "store", "load_plan": "store",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.artifact' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f"repro.artifact.{mod}"), name)
+
+
+def __dir__():
+    return __all__

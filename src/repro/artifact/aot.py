@@ -1,0 +1,123 @@
+"""AOT executable cache: serialize compiled XLA programs (DESIGN.md §12).
+
+The last — and on a real backend by far the largest — cold-start phase
+is XLA compilation of the plan's jitted step. jax's AOT path splits it
+off the first dispatch: ``jit(fn).lower(ShapeDtypeStruct).compile()``
+produces a ``Compiled`` whose underlying PJRT executable most backends
+can serialize (``jax.experimental.serialize_executable``). The artifact
+store lowers at **save** time and ships the bytes; ``load`` restores the
+executable and the replica's first request runs a program that was never
+compiled in its process.
+
+Robustness contract (the fallback ladder's middle rung): a backend that
+cannot serialize returns ``None`` from ``serialize_compiled`` with a
+warning (the artifact still carries the plan — boot then compiles from
+IR); a payload written on another platform / jax version / device count
+raises ``AOTMismatchError`` on load, which callers turn into a warning +
+compile-from-IR, never a crash.
+
+Deserialized executables are cached in-process per (fingerprint, input
+shape, platform), so a bucket ladder that shares one artifact pays one
+deserialize per program, and repeated ``load_plan`` calls are free.
+"""
+from __future__ import annotations
+
+import pickle
+import warnings
+
+import jax
+
+__all__ = ["AOTMismatchError", "aot_compile", "serialize_compiled",
+           "deserialize_compiled", "executable_key", "cached_executable",
+           "cache_executable", "clear_executable_cache"]
+
+
+class AOTMismatchError(RuntimeError):
+    """Serialized executable is not loadable here (platform / jax version
+    / device count changed since save)."""
+
+
+def _platform() -> str:
+    return jax.default_backend()
+
+
+def aot_compile(fn, input_shape, dtype="float32"):
+    """Lower + compile ``fn`` for one static input shape — the jit work
+    the serving warm call used to do implicitly, made explicit so it can
+    happen at artifact-save time (and be timed as its own boot phase)."""
+    import jax.numpy as jnp
+    spec = jax.ShapeDtypeStruct(tuple(input_shape), jnp.dtype(dtype))
+    return jax.jit(fn).lower(spec).compile()
+
+
+def serialize_compiled(compiled) -> bytes | None:
+    """-> one self-describing blob (executable bytes + arg pytrees +
+    environment stamp), or None with a warning where the backend does not
+    support executable serialization."""
+    try:
+        from jax.experimental import serialize_executable as se
+        payload, in_tree, out_tree = se.serialize(compiled)
+        return pickle.dumps({
+            "platform": _platform(),
+            "jax_version": jax.__version__,
+            "num_devices": jax.device_count(),
+            "payload": payload,
+            "in_tree": in_tree,
+            "out_tree": out_tree,
+        })
+    except Exception as e:                      # pragma: no cover - backend
+        warnings.warn(
+            f"AOT executable serialization unsupported on this backend "
+            f"({type(e).__name__}: {e}); artifact will carry the plan IR "
+            f"only and replicas will compile at boot", stacklevel=2)
+        return None
+
+
+def deserialize_compiled(blob: bytes):
+    """Blob -> ``Compiled``. Raises ``AOTMismatchError`` when the blob
+    was produced in an incompatible environment (callers warn and fall
+    back to compile-from-IR)."""
+    try:
+        doc = pickle.loads(blob)
+    except Exception as e:
+        raise AOTMismatchError(f"corrupt AOT payload: {e}") from e
+    if not isinstance(doc, dict) or "payload" not in doc:
+        raise AOTMismatchError("corrupt AOT payload: not an AOT blob")
+    env = (_platform(), jax.__version__, jax.device_count())
+    saved = (doc.get("platform"), doc.get("jax_version"),
+             doc.get("num_devices"))
+    if saved != env:
+        raise AOTMismatchError(
+            f"AOT executable was compiled for platform/jax/devices "
+            f"{saved}, this process is {env}")
+    try:
+        from jax.experimental import serialize_executable as se
+        return se.deserialize_and_load(doc["payload"], doc["in_tree"],
+                                       doc["out_tree"])
+    except Exception as e:
+        raise AOTMismatchError(
+            f"backend refused the serialized executable "
+            f"({type(e).__name__}: {e})") from e
+
+
+# ---------------------------------------------------------------------------
+# in-process per-fingerprint executable cache
+
+_EXEC_CACHE: dict[tuple, object] = {}
+
+
+def executable_key(fingerprint: str, input_shape, dtype="float32") -> tuple:
+    return (fingerprint, tuple(int(s) for s in input_shape), str(dtype),
+            _platform())
+
+
+def cached_executable(key: tuple):
+    return _EXEC_CACHE.get(key)
+
+
+def cache_executable(key: tuple, compiled) -> None:
+    _EXEC_CACHE[key] = compiled
+
+
+def clear_executable_cache() -> None:
+    _EXEC_CACHE.clear()

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.artifact.warmup import phase
 from repro.core.quantize import QFormat, QTensor, quantize_int8
 from repro.core.window import maxpool2
 from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
@@ -382,14 +383,36 @@ class ExecutionPlan:
         folded = self._fold_constants(params)
         tuned: dict = {}
         if self.autotune:
-            tuned = self._autotune_stages(params, folded, policy=policy)
+            with phase("tune"):
+                tuned = self._autotune_stages(params, folded, policy=policy)
+        placed = self._place_weights(params, folded)
+        return BoundPlan(plan=self, params=params, folded=folded,
+                         policy=policy, placed=placed, tuned=tuned)
+
+    def _place_weights(self, params, folded: dict) -> dict:
+        """The mesh half of ``bind``: ``device_put`` every sharded conv
+        stage's weight operands under their ShardingSpec. Pure data
+        movement over an already-placed graph — the artifact loader
+        (DESIGN.md §12) re-runs this on restored payloads without ever
+        re-running the placement *pass*."""
         placed: dict = {}
         if self.mesh is not None:
             for node in self.graph:
                 if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
                     self._shard_weight(node, folded, placed, params)
-        return BoundPlan(plan=self, params=params, folded=folded,
-                         policy=policy, placed=placed, tuned=tuned)
+        return placed
+
+    # ---------- persistence (DESIGN.md §12) ----------
+    def save(self, params, path, *, policy: ExecPolicy | None = None,
+             input_shapes=None, aot: bool = True) -> str:
+        """``bind`` against ``params`` and persist the result as a plan
+        artifact (``repro.artifact.store.save_plan``): manifest + weight/
+        QTensor payloads + AOT-compiled executables. Returns the content
+        fingerprint. ``PaperCNN.compile(...).save(params, path)`` is the
+        one-line export; ``BoundPlan.load(path)`` is the matching
+        zero-derivation import."""
+        return self.bind(params, policy=policy).save(
+            path, input_shapes=input_shapes, aot=aot)
 
     # ---------- introspection ----------
     def stages(self) -> list[str]:
@@ -431,6 +454,30 @@ class BoundPlan:
                          _folded=self.folded, _placed=self.placed,
                          _tuned=self.tuned)
 
+    # ---------- persistence (DESIGN.md §12) ----------
+    def fingerprint(self) -> str:
+        """Content fingerprint over graph IR + quant + placement + baked
+        tiles + policies + mesh shape + weights + versions."""
+        from repro.artifact.fingerprint import plan_fingerprint
+        return plan_fingerprint(self.plan, params=self.params,
+                                tuned=self.tuned, bind_policy=self.policy)
+
+    def save(self, path, *, input_shapes=None, aot: bool = True) -> str:
+        """Persist as a versioned plan artifact; returns the content
+        fingerprint. See ``repro.artifact.store.save_plan``."""
+        from repro.artifact.store import save_plan
+        return save_plan(self, path, input_shapes=input_shapes, aot=aot)
+
+    @classmethod
+    def load(cls, path, *, params=None) -> "BoundPlan":
+        """Reconstruct a bound plan from an artifact — no re-trace, no
+        passes, no re-placement, no re-tuning. ``params`` (optional)
+        asserts the artifact matches the caller's weights. Raises
+        ``repro.artifact.ArtifactError`` when the artifact is unusable
+        (serving paths use ``PlanStore.load`` for warn-and-fall-back)."""
+        from repro.artifact.store import load_plan
+        return load_plan(path, params=params).bound
+
 
 def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
                   policy: ExecPolicy | None = None, fuse: bool = True,
@@ -460,19 +507,22 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
         exec_pol = getattr(cfg_pol, "exec_policy", None)
         pol = exec_pol() if callable(exec_pol) else None
     quant_pol = pol if pol is not None else current_policy()
-    graph = trace(model, tuple(input_shape), dtype)
-    graph = default_passes(graph, quant=quant_pol.quant,
-                           qformat=quant_pol.qformat, fuse=fuse)
+    with phase("trace"):
+        graph = trace(model, tuple(input_shape), dtype)
+    with phase("fuse"):
+        graph = default_passes(graph, quant=quant_pol.quant,
+                               qformat=quant_pol.qformat, fuse=fuse)
     if mesh is not None:
         if "model" not in mesh.axis_names:
             raise ValueError(
                 f"mesh {dict(mesh.shape)} has no 'model' axis; channel "
                 f"parallelism (paper §III.A) shards over 'model' and "
                 f"batches over 'data'")
-        graph = place_channel_parallel(
-            graph, mesh.shape["model"],
-            override=quant_pol.channel_parallel,
-            data="data" in mesh.axis_names)
+        with phase("place"):
+            graph = place_channel_parallel(
+                graph, mesh.shape["model"],
+                override=quant_pol.channel_parallel,
+                data="data" in mesh.axis_names)
     return ExecutionPlan(graph=graph, quant=quant_pol.quant,
                          qformat=quant_pol.qformat, compile_policy=pol,
                          mesh=mesh,

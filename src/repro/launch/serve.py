@@ -84,7 +84,15 @@ def _serve_vision(spec, model, args) -> None:
     the vision path single-device — the CNN is small enough that sharding
     is an explicit operator choice, not a default. ``--autotune`` measures
     tile winners at bind time (or takes them from ``--tuning-cache``) and
-    bakes them into the served plans (DESIGN.md §10)."""
+    bakes them into the served plans (DESIGN.md §10).
+
+    ``--plan-artifact DIR`` boots the bucket ladder from a plan artifact
+    store (DESIGN.md §12): zero trace/fuse/place/tune work when every
+    bucket hits, fresh-pipeline fallback (with a warning) otherwise.
+    ``--save-plan DIR`` writes the ladder back out for the next replica;
+    ``--warmup-report`` prints the per-phase time-to-ready breakdown
+    either way."""
+    from repro.artifact.warmup import collect_warmup
     from repro.launch.train import build_mesh
     from repro.serve import (MonotonicClock, VisionAdapter, VisionEngine,
                              VisionEngineConfig)
@@ -92,12 +100,15 @@ def _serve_vision(spec, model, args) -> None:
     clock = MonotonicClock()
     mesh = None if args.mesh == "auto" else build_mesh(args.mesh)
     params = model.init(jax.random.PRNGKey(0))
-    engine = VisionEngine(
-        model, params,
-        VisionEngineConfig(batch=args.capacity, mesh=mesh,
-                           buckets=None if args.fixed_batch else "auto",
-                           autotune=args.autotune),
-        clock=clock)
+    with collect_warmup() as boot:
+        # prewarm (on by default) compiles/loads EVERY ladder bucket here
+        engine = VisionEngine(
+            model, params,
+            VisionEngineConfig(batch=args.capacity, mesh=mesh,
+                               buckets=None if args.fixed_batch else "auto",
+                               autotune=args.autotune,
+                               artifact_dir=args.plan_artifact),
+            clock=clock)
     plan = engine.plan
     sharded = "" if mesh is None else (
         f", {plan.num_sharded()} sharded stages over "
@@ -109,7 +120,21 @@ def _serve_vision(spec, model, args) -> None:
     print(f"arch={args.arch} vision path: compiled plan with "
           f"{plan.num_fused()} fused conv blocks, quant={plan.quant}"
           f"{sharded}{tuned}, batch buckets {list(engine.buckets)}")
-    engine.warm()                       # compiles out of measured latency
+    if args.warmup_report:
+        print(boot.pretty())
+    if args.plan_artifact:
+        srcs = ", ".join(f"{b}:{s}"
+                         for b, s in sorted(engine.plan_source.items()))
+        print(f"plan artifacts: {srcs}")
+        status = ("OK (trace/fuse/place/tune phases all 0)"
+                  if boot.zero_compile() else
+                  "DEGRADED (fresh pipeline ran for some buckets)")
+        print(f"zero-derivation boot: {status}")
+    if args.save_plan:
+        fps = engine.save_artifacts(args.save_plan)
+        for name, fp in sorted(fps.items()):
+            print(f"saved plan artifact {args.save_plan}/{name} "
+                  f"fingerprint={fp[:16]}")
 
     frontend = _frontend(VisionAdapter(engine), args, clock)
     rng = np.random.RandomState(1)
@@ -166,6 +191,17 @@ def main() -> None:
     ap.add_argument("--fixed-batch", action="store_true",
                     help="serve every micro-batch at the full --capacity "
                          "shape (disable bucketed batch plans)")
+    ap.add_argument("--plan-artifact", default=None, metavar="DIR",
+                    help="boot bucket plans from a plan artifact store "
+                         "(zero trace/fuse/place/tune on full hit; "
+                         "misses fall back to the fresh pipeline)")
+    ap.add_argument("--save-plan", default=None, metavar="DIR",
+                    help="after boot, save every bucket plan (+ AOT "
+                         "executables) into DIR for the next replica")
+    ap.add_argument("--warmup-report", action="store_true",
+                    help="print the time-to-ready phase breakdown "
+                         "(trace/fuse/place/tune/compile/artifact/"
+                         "first_dispatch)")
     args = ap.parse_args()
 
     from repro.configs.registry import get_arch

@@ -194,13 +194,40 @@ class TuningCache:
     def restore(self, entries: dict) -> None:
         self._entries = dict(entries)
 
+    # ---------- row interop (plan artifacts, DESIGN.md §12) ----------
+    def export_rows(self) -> list[dict]:
+        """Every entry as a JSON-able row (the persisted ``entries``
+        shape) — the plan artifact store embeds the rows covering a
+        plan's stages in its manifest."""
+        return [{"op": op, "shape": list(shape), "dtype": dt,
+                 "platform": plat, "params": dict(p)}
+                for (op, shape, dt, plat), p in sorted(self._entries.items())]
+
+    def merge_rows(self, rows, *, keep_existing: bool = False,
+                   source: str = "tuning rows") -> int:
+        """Merge row dicts (``export_rows`` format); returns how many
+        landed. ``keep_existing=True`` never overwrites an entry already
+        in this process — artifact-embedded rows must not clobber fresher
+        local measurements. Malformed rows warn and are skipped."""
+        loaded = 0
+        for row in rows:
+            try:
+                key = self.key(row["op"], row["shape"], row["dtype"],
+                               row.get("platform"))
+                if keep_existing and key in self._entries:
+                    continue
+                self._entries[key] = {k: int(v)
+                                      for k, v in dict(row["params"]).items()}
+                loaded += 1
+            except (KeyError, TypeError, ValueError):
+                warnings.warn(f"{source}: skipping malformed row {row!r}",
+                              stacklevel=2)
+        return loaded
+
     # ---------- persistence ----------
     def save(self, path) -> None:
         """Write the versioned JSON cache (schema ``SCHEMA_VERSION``)."""
-        rows = [{"op": op, "shape": list(shape), "dtype": dt,
-                 "platform": plat, "params": p}
-                for (op, shape, dt, plat), p in sorted(self._entries.items())]
-        doc = {"version": SCHEMA_VERSION, "entries": rows}
+        doc = {"version": SCHEMA_VERSION, "entries": self.export_rows()}
         pathlib.Path(path).write_text(json.dumps(doc, indent=1) + "\n")
 
     def load(self, path) -> int:

@@ -13,9 +13,20 @@ per-image work without HBM round-trips between conv/relu/pool.
 padding every short batch to the one full compiled shape (paying dead pad
 lanes), the engine keeps a plan cache keyed by padded batch bucket (e.g.
 1/2/4/8 for ``batch=8``) and serves each micro-batch through the smallest
-bucket that fits — short tails stop paying full-batch pad lanes. Buckets
-compile lazily on first use; ``VisionStats.pad_fraction`` makes the win
-visible (surfaced by ``benchmarks/serve_throughput.py``).
+bucket that fits — short tails stop paying full-batch pad lanes. The
+whole ladder **pre-warms at boot** (``VisionEngineConfig.prewarm``,
+default on): a bucket that compiled lazily on its first short batch used
+to spike that request's p99 by a whole XLA compile; now every bucket's
+program exists before traffic arrives. ``VisionStats.pad_fraction`` makes
+the bucketing win visible (surfaced by ``benchmarks/serve_throughput.py``).
+
+``VisionEngineConfig.artifact_dir`` points the ladder at a **plan
+artifact store** (repro.artifact, DESIGN.md §12): each bucket first
+tries ``<dir>/bucket_<b>`` — a hit restores the bound plan (weights,
+folded quantization, baked tiles) and its AOT-compiled executable with
+zero trace/fuse/place/tune work, a stale or corrupt artifact warns and
+falls back to the fresh pipeline. ``save_artifacts()`` writes the
+ladder back out, which is what ``launch/serve.py --save-plan`` calls.
 
 The plan is ``bind``-ed to the params at engine construction: weight
 quantization (int8 scales, Qm.n snapping) is folded once — the serving
@@ -63,6 +74,14 @@ class VisionEngineConfig:
     buckets: tuple[int, ...] | str | None = None
     # measured tile selection at bind time (DESIGN.md §10)
     autotune: bool = False
+    # compile (or artifact-load) EVERY ladder bucket at construction so
+    # no request ever pays a one-time compile in its latency (the lazy
+    # first-short-batch compile used to spike p99 per bucket)
+    prewarm: bool = True
+    # plan artifact store directory (DESIGN.md §12): bucket plans load
+    # from ``<dir>/bucket_<b>`` when present (zero-derivation boot) and
+    # ``save_artifacts()`` writes them back. None disables the store.
+    artifact_dir: str | None = None
 
 
 @dataclass
@@ -111,11 +130,19 @@ class VisionEngine:
                     f"axis ({self._data_div} devices); the compiled batch "
                     f"shape is sharded over it — pick a divisible batch")
         self.buckets = self._resolve_buckets(config)
-        self._steps: dict[int, object] = {}     # bucket -> jitted bound call
+        self._steps: dict[int, object] = {}     # bucket -> AOT executable
         self._bounds: dict[int, object] = {}    # bucket -> BoundPlan
-        # the full-batch plan compiles eagerly (it is the steady-state
-        # program; buckets below it compile lazily on first short batch)
+        # bucket -> "artifact+aot" | "artifact" | "fresh" (boot telemetry)
+        self.plan_source: dict[int, str] = {}
+        self._store = None
+        if config.artifact_dir is not None:
+            from repro.artifact.store import PlanStore
+            self._store = PlanStore(config.artifact_dir)
         self.plan = self._compile_bucket(config.batch)
+        if config.prewarm:
+            # every ladder bucket gets its program before traffic arrives
+            # (from the artifact store when available)
+            self.warm()
         self.stats = VisionStats()
         self._queue: deque[tuple[int, np.ndarray]] = deque()
         self.results: dict[int, dict] = {}
@@ -141,23 +168,70 @@ class VisionEngine:
         return tuple(b for b in ladder
                      if b % self._data_div == 0) or (config.batch,)
 
+    @staticmethod
+    def bucket_name(bucket: int) -> str:
+        """Artifact name of one bucket plan inside the store."""
+        return f"bucket_{bucket}"
+
     def _compile_bucket(self, bucket: int):
-        """Compile + bind + jit + warm the plan for one padded batch
-        shape. The warm call traces/compiles the XLA program here, so
-        one-time compile (and bind-time autotune measurement) cost never
-        lands in a timed serving step — ``VisionStats.wall_s`` measures
-        serving only."""
-        plan = self.model.compile(policy=self.config.policy,
-                                  fuse=self.config.fuse, batch=bucket,
-                                  mesh=self.config.mesh,
-                                  autotune=self.config.autotune)
-        bound = plan.bind(self._params)
+        """Produce the ready program for one padded batch shape.
+
+        With an artifact store: restore the bound plan (and, when the
+        backend/versions match, the AOT executable) — zero trace/fuse/
+        place/tune work; any artifact problem warns and falls through to
+        the fresh pipeline. Without (or on fallback): compile + bind,
+        then AOT-lower the program explicitly (``jit().lower().compile()``)
+        so compile time is its own warmup phase. Either way the warm
+        dispatch runs here, outside any timed serving step —
+        ``VisionStats.wall_s`` measures serving only."""
+        from repro.artifact.aot import aot_compile
+        from repro.artifact.warmup import phase
+        shape = (bucket, *self.model.input_shape()[1:])
+        bound = exe = None
+        source = "fresh"
+        if self._store is not None:
+            art = self._store.load(self.bucket_name(bucket),
+                                   params=self._params)
+            if art is not None:
+                bound = art.bound
+                exe = art.executable(shape)
+                source = "artifact+aot" if exe is not None else "artifact"
+        if bound is None:
+            plan = self.model.compile(policy=self.config.policy,
+                                      fuse=self.config.fuse, batch=bucket,
+                                      mesh=self.config.mesh,
+                                      autotune=self.config.autotune)
+            bound = plan.bind(self._params)
+        if exe is None:
+            with phase("compile"):
+                exe = aot_compile(lambda x, b=bound: b(x), shape)
         self._bounds[bucket] = bound
-        self._steps[bucket] = jax.jit(lambda x: bound(x))
-        warm = jnp.zeros((bucket, *self.model.input_shape()[1:]),
-                         jnp.float32)
-        jax.block_until_ready(self._steps[bucket](warm))
-        return plan
+        self._steps[bucket] = exe
+        self.plan_source[bucket] = source
+        warm = jnp.zeros(shape, jnp.float32)
+        with phase("first_dispatch"):
+            jax.block_until_ready(exe(warm))
+        return bound.plan
+
+    def save_artifacts(self, directory=None) -> dict[str, str]:
+        """Persist every compiled bucket plan (+ its AOT executable) into
+        the store at ``directory`` (default: the configured
+        ``artifact_dir``) — what ``launch/serve.py --save-plan`` calls.
+        Returns {artifact name: fingerprint}."""
+        from repro.artifact.store import PlanStore
+        if directory is None and self._store is not None:
+            store = self._store
+        elif directory is not None:
+            store = PlanStore(directory)
+        else:
+            raise ValueError("no artifact directory: pass one or set "
+                             "VisionEngineConfig.artifact_dir")
+        out = {}
+        for bucket, bound in sorted(self._bounds.items()):
+            shape = (bucket, *self.model.input_shape()[1:])
+            name = self.bucket_name(bucket)
+            out[name] = store.save(name, bound, input_shapes=[shape])
+        return out
 
     def _bucket_for(self, k: int) -> int:
         for b in self.buckets:
@@ -166,10 +240,11 @@ class VisionEngine:
         return self.buckets[-1]
 
     def warm(self) -> None:
-        """Compile every bucket in the ladder now. Lazy compiles already
-        happen outside the timed serving step, but a latency benchmark
-        (benchmarks/serve_slo.py) wants them out of *request latency*
-        too — a request must not pay a one-time compile in its p99."""
+        """Make every ladder bucket's program exist now (from artifacts
+        when available). Runs at construction by default
+        (``config.prewarm``): a one-time compile must never land in a
+        request's latency — the old lazy first-short-batch compile
+        spiked p99 by a whole XLA compile per bucket."""
         for b in self.buckets:
             if b not in self._steps:
                 self._compile_bucket(b)

@@ -1,0 +1,316 @@
+"""The plan artifact store (repro.artifact, DESIGN.md §12): fingerprint
+semantics, save/load roundtrips, AOT executable restore, the fallback
+ladder (corrupt / unknown schema / stale params → warn, never crash),
+and zero-derivation serving boots."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.artifact import (ArtifactError, ArtifactStaleError, PlanStore,
+                            clear_executable_cache, graph_from_doc,
+                            graph_to_doc, load_plan, params_digest,
+                            save_plan)
+from repro.artifact.fingerprint import SCHEMA_VERSION, plan_fingerprint
+from repro.artifact.warmup import PHASES, collect_warmup, phase
+from repro.graph import BoundPlan
+from repro.models.cnn import PaperCNN, PaperCNNConfig
+from repro.ops import ExecPolicy
+from repro.serve import VisionEngine, VisionEngineConfig
+
+KEY = jax.random.PRNGKey(0)
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def model():
+    return PaperCNN(PaperCNNConfig())
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init(KEY)
+
+
+@pytest.fixture(scope="module")
+def images(model):
+    return jax.random.normal(jax.random.PRNGKey(1),
+                             (2, *model.input_shape()[1:]))
+
+
+def _bound(model, params, quant="none", batch=2):
+    plan = model.compile(policy=ExecPolicy(quant=quant), batch=batch)
+    return plan.bind(params)
+
+
+class TestGraphCodec:
+    def test_roundtrip_is_structural_identity(self, model):
+        for quant in ("none", "qformat", "int8"):
+            g = model.compile(policy=ExecPolicy(quant=quant), batch=2).graph
+            assert graph_from_doc(graph_to_doc(g)) == g
+
+    def test_doc_is_json_stable(self, model):
+        g = model.compile(batch=2).graph
+        a = json.dumps(graph_to_doc(g), sort_keys=True)
+        b = json.dumps(graph_to_doc(g), sort_keys=True)
+        assert a == b
+
+    def test_unknown_op_rejected(self, model):
+        doc = graph_to_doc(model.compile(batch=2).graph)
+        doc["nodes"][1]["op"] = "systolic_array"
+        with pytest.raises(ValueError, match="systolic_array"):
+            graph_from_doc(doc)
+
+
+class TestFingerprint:
+    def test_stable_across_recompiles(self, model, params):
+        assert (_bound(model, params).fingerprint()
+                == _bound(model, params).fingerprint())
+
+    def test_stable_across_processes(self, model, params):
+        """The store's whole premise: a replica in another process
+        derives the SAME identity for the same (model, weights, policy).
+        """
+        code = (
+            "import jax\n"
+            "from repro.models.cnn import PaperCNN, PaperCNNConfig\n"
+            "from repro.ops import ExecPolicy\n"
+            "m = PaperCNN(PaperCNNConfig())\n"
+            "p = m.init(jax.random.PRNGKey(0))\n"
+            "b = m.compile(policy=ExecPolicy(quant='none'), batch=2)"
+            ".bind(p)\n"
+            "print(b.fingerprint())\n")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(REPO / "src")
+        out = subprocess.run([sys.executable, "-c", code], env=env,
+                             capture_output=True, text=True, check=True)
+        assert out.stdout.strip() == _bound(model, params).fingerprint()
+
+    def test_weights_change_it(self, model, params):
+        other = model.init(jax.random.PRNGKey(7))
+        assert (_bound(model, params).fingerprint()
+                != _bound(model, other).fingerprint())
+
+    def test_quant_mode_changes_it(self, model, params):
+        fps = {_bound(model, params, quant=q).fingerprint()
+               for q in ("none", "qformat", "int8")}
+        assert len(fps) == 3
+
+    def test_baked_tiles_change_it(self, model, params):
+        b = _bound(model, params)
+        tweaked = BoundPlan(plan=b.plan, params=b.params, folded=b.folded,
+                            policy=b.policy, placed=b.placed,
+                            tuned={**b.tuned, 3: {"bb": 2}})
+        assert b.fingerprint() != tweaked.fingerprint()
+
+    def test_mesh_changes_it(self, model, params):
+        from jax.sharding import Mesh
+        mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("model",))
+        plain = _bound(model, params)
+        meshed = model.compile(policy=ExecPolicy(quant="none"), batch=2,
+                               mesh=mesh).bind(params)
+        assert plain.fingerprint() != meshed.fingerprint()
+
+    def test_params_digest_orders_keys(self, params):
+        def rev(d):
+            if isinstance(d, dict):
+                return {k: rev(v) for k, v in reversed(list(d.items()))}
+            return d
+        assert params_digest(params) == params_digest(rev(params))
+
+
+class TestRoundtrip:
+    @pytest.mark.parametrize("quant", ["none", "qformat", "int8"])
+    def test_bitwise_equal_outputs(self, tmp_path, model, params, images,
+                                   quant):
+        bound = _bound(model, params, quant=quant)
+        want = np.asarray(bound(images))
+        fp = bound.save(tmp_path / quant, aot=False)
+        clear_executable_cache()
+        restored = BoundPlan.load(tmp_path / quant)
+        assert restored.fingerprint() == fp
+        np.testing.assert_array_equal(np.asarray(restored(images)), want)
+
+    def test_no_derivation_work_on_load(self, tmp_path, model, params):
+        _bound(model, params).save(tmp_path / "p", aot=False)
+        with collect_warmup() as rep:
+            BoundPlan.load(tmp_path / "p")
+        assert rep.zero_compile()
+        assert rep.phase_calls("artifact") == 1
+        for p in ("trace", "fuse", "place", "tune", "compile"):
+            assert rep.phase_calls(p) == 0, p
+
+    def test_execution_plan_save_is_bind_plus_save(self, tmp_path, model,
+                                                   params, images):
+        plan = model.compile(policy=ExecPolicy(quant="int8"), batch=2)
+        fp = plan.save(params, tmp_path / "p", aot=False)
+        restored = BoundPlan.load(tmp_path / "p", params=params)
+        assert restored.fingerprint() == fp
+        np.testing.assert_array_equal(
+            np.asarray(restored(images)),
+            np.asarray(plan.bind(params)(images)))
+
+    def test_tuned_tiles_survive(self, tmp_path, model, params):
+        b = _bound(model, params)
+        tuned = {i: {"bb": 1} for i in b.tuned} or {1: {"bb": 1}}
+        src = BoundPlan(plan=b.plan, params=b.params, folded=b.folded,
+                        policy=b.policy, placed=b.placed, tuned=tuned)
+        src.save(tmp_path / "p", aot=False)
+        assert BoundPlan.load(tmp_path / "p").tuned == tuned
+
+
+class TestAOT:
+    def test_executable_restores_and_matches(self, tmp_path, model,
+                                             params, images):
+        bound = _bound(model, params)
+        shape = tuple(images.shape)
+        want = np.asarray(bound(images))
+        save_plan(bound, tmp_path / "p", input_shapes=[shape])
+        clear_executable_cache()
+        art = load_plan(tmp_path / "p")
+        exe = art.executable(shape)
+        assert exe is not None and art.restored_aot(shape)
+        np.testing.assert_array_equal(
+            np.asarray(exe(jnp.asarray(images))), want)
+
+    def test_missing_aot_falls_back_to_compile(self, tmp_path, model,
+                                               params, images):
+        bound = _bound(model, params)
+        shape = tuple(images.shape)
+        save_plan(bound, tmp_path / "p", aot=False)
+        clear_executable_cache()
+        art = load_plan(tmp_path / "p")
+        assert art.executable(shape) is None
+        with collect_warmup() as rep:
+            prog = art.program(shape)
+        assert rep.phase_calls("compile") == 1   # lower/compile from IR
+        np.testing.assert_array_equal(
+            np.asarray(prog(jnp.asarray(images))),
+            np.asarray(bound(images)))
+
+
+class TestFallbackLadder:
+    """Bad artifacts must warn and fall back — never crash a boot."""
+
+    def _saved(self, tmp_path, model, params):
+        store = PlanStore(tmp_path)
+        store.save("bucket_2", _bound(model, params), aot=False)
+        return store
+
+    def test_corrupt_manifest(self, tmp_path, model, params):
+        store = self._saved(tmp_path, model, params)
+        (store.path("bucket_2") / "manifest.json").write_text("{not json")
+        with pytest.warns(UserWarning, match="falling back"):
+            assert store.load("bucket_2") is None
+
+    def test_unknown_schema_version(self, tmp_path, model, params):
+        store = self._saved(tmp_path, model, params)
+        mf = store.path("bucket_2") / "manifest.json"
+        doc = json.loads(mf.read_text())
+        doc["schema_version"] = SCHEMA_VERSION + 99
+        mf.write_text(json.dumps(doc))
+        with pytest.raises(ArtifactError, match="schema"):
+            load_plan(store.path("bucket_2"))
+        with pytest.warns(UserWarning, match="falling back"):
+            assert store.load("bucket_2") is None
+
+    def test_tampered_payload_fails_fingerprint(self, tmp_path, model,
+                                                params):
+        store = self._saved(tmp_path, model, params)
+        mf = store.path("bucket_2") / "manifest.json"
+        doc = json.loads(mf.read_text())
+        doc["quant"] = "int8"            # lie about the baked quant mode
+        mf.write_text(json.dumps(doc))
+        with pytest.warns(UserWarning, match="falling back"):
+            assert store.load("bucket_2") is None
+
+    def test_stale_params_detected(self, tmp_path, model, params):
+        store = self._saved(tmp_path, model, params)
+        other = model.init(jax.random.PRNGKey(7))
+        with pytest.raises(ArtifactStaleError):
+            load_plan(store.path("bucket_2"), params=other)
+        with pytest.warns(UserWarning, match="falling back"):
+            assert store.load("bucket_2", params=other) is None
+
+    def test_missing_artifact_is_a_quiet_none(self, tmp_path):
+        assert not PlanStore(tmp_path).has("bucket_8")
+        with pytest.warns(UserWarning, match="falling back"):
+            assert PlanStore(tmp_path).load("bucket_8") is None
+
+
+class TestServingBoot:
+    def test_artifact_boot_runs_zero_derivation(self, tmp_path, model,
+                                                params):
+        donor = VisionEngine(model, params,
+                             VisionEngineConfig(batch=2, buckets="auto"))
+        donor.save_artifacts(tmp_path)
+        clear_executable_cache()
+        with collect_warmup() as boot:
+            engine = VisionEngine(
+                model, params,
+                VisionEngineConfig(batch=2, buckets="auto",
+                                   artifact_dir=str(tmp_path)))
+        assert boot.zero_compile()
+        assert set(engine.plan_source.values()) == {"artifact+aot"}
+
+    def test_artifact_boot_serves_identically(self, tmp_path, model,
+                                              params, images):
+        fresh = VisionEngine(model, params,
+                             VisionEngineConfig(batch=2, buckets="auto"))
+        fresh.save_artifacts(tmp_path)
+        clear_executable_cache()
+        booted = VisionEngine(
+            model, params,
+            VisionEngineConfig(batch=2, buckets="auto",
+                               artifact_dir=str(tmp_path)))
+        img = np.asarray(images[0])
+        a, b = fresh.submit(img), booted.submit(img)
+        np.testing.assert_array_equal(fresh.run()[a]["logits"],
+                                      booted.run()[b]["logits"])
+
+    def test_stale_store_falls_back_to_fresh(self, tmp_path, model,
+                                             params):
+        donor = VisionEngine(model, params,
+                             VisionEngineConfig(batch=2, buckets=None))
+        donor.save_artifacts(tmp_path)
+        other = model.init(jax.random.PRNGKey(7))
+        with pytest.warns(UserWarning, match="falling back"):
+            engine = VisionEngine(
+                model, other,
+                VisionEngineConfig(batch=2, buckets=None,
+                                   artifact_dir=str(tmp_path)))
+        assert engine.plan_source[2] == "fresh"
+
+
+class TestWarmupReport:
+    def test_phase_attribution(self):
+        with collect_warmup() as rep:
+            with phase("trace"):
+                pass
+            with phase("trace"):
+                pass
+            with phase("compile"):
+                pass
+        assert rep.phase_calls("trace") == 2
+        assert rep.phase_calls("compile") == 1
+        assert not rep.zero_compile()
+        text = rep.pretty()
+        assert all(p in text for p in PHASES)
+
+    def test_noop_outside_collector(self):
+        with phase("compile"):        # no active report: must not raise
+            pass
+
+    def test_zero_compile_means_no_derivation(self):
+        with collect_warmup() as rep:
+            with phase("artifact"):
+                pass
+            with phase("first_dispatch"):
+                pass
+        assert rep.zero_compile()
