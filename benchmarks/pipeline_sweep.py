@@ -66,12 +66,16 @@ def _best_us(fn, *args, warmup: int = 3, iters: int = 25) -> float:
     return best * 1e6
 
 
-def sweep(batches=BATCHES, quants=QUANTS, *, warmup=3, iters=25):
+def sweep(batches=BATCHES, quants=QUANTS, *, img_size=28, warmup=3,
+          iters=25):
     """-> rows [{quant, batch, eager_us, plan_us, gops_eager, gops_plan,
-    speedup}]."""
+    speedup}]. ``img_size`` scales the workload past MNIST — above the
+    streaming budget the compiled plan's over-budget stages execute as
+    halo row bands (DESIGN.md §13) while eager stays full-frame."""
     key = jax.random.PRNGKey(0)
-    flops1 = PaperCNNConfig().flops_per_image()
-    model = PaperCNN(PaperCNNConfig())
+    cfg = PaperCNNConfig(img_size=img_size)
+    flops1 = cfg.flops_per_image()
+    model = PaperCNN(cfg)
     params = model.init(key)
     rows = []
     for quant in quants:
@@ -82,7 +86,7 @@ def sweep(batches=BATCHES, quants=QUANTS, *, warmup=3, iters=25):
         eager_fwd = jax.jit(lambda p, x: model.forward(p, x))
 
         for b in batches:
-            x = jax.random.normal(key, (b, 1, 28, 28))
+            x = jax.random.normal(key, model.input_shape(b))
             with use_policy(pol):
                 t_eager = _best_us(eager_fwd, params, x,
                                    warmup=warmup, iters=iters)
@@ -123,7 +127,8 @@ def _best_us_interleaved(fa, fb, *args, warmup: int = 3,
     return best_a * 1e6, best_b * 1e6
 
 
-def tuned_vs_heuristic(quants=QUANTS, *, warmup=3, iters=25) -> dict:
+def tuned_vs_heuristic(quants=QUANTS, *, img_size=28, warmup=3,
+                       iters=25) -> dict:
     """Time the fused plan at the reference batch on the pallas backend
     with heuristic vs bind-time-autotuned tiles (DESIGN.md §10).
 
@@ -143,10 +148,11 @@ def tuned_vs_heuristic(quants=QUANTS, *, warmup=3, iters=25) -> dict:
     a surviving winner reports its measured ratio (``"kept"``).
     """
     key = jax.random.PRNGKey(0)
-    flops1 = PaperCNNConfig().flops_per_image()
-    model = PaperCNN(PaperCNNConfig())
+    cfg = PaperCNNConfig(img_size=img_size)
+    flops1 = cfg.flops_per_image()
+    model = PaperCNN(cfg)
     params = model.init(key)
-    x = jax.random.normal(key, (REFERENCE_BATCH, 1, 28, 28))
+    x = jax.random.normal(key, model.input_shape(REFERENCE_BATCH))
     out = {}
     for quant in quants:
         pol = ExecPolicy(quant=quant, backend="pallas")
@@ -263,14 +269,21 @@ if __name__ == "__main__":
                          "tuned-vs-heuristic timing")
     ap.add_argument("--no-json", action="store_true",
                     help="skip the BENCH_pipeline.json trajectory write")
+    ap.add_argument("--img-size", type=int, default=28,
+                    help="input resolution; above the streaming budget "
+                         "the plan's stages run as halo row bands "
+                         "(DESIGN.md §13)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
-        rows = sweep(batches=[1, 8], warmup=2, iters=8)
+        rows = sweep(batches=[1, 8], img_size=args.img_size,
+                     warmup=2, iters=8)
         tuned = None
     else:
-        rows = sweep()
-        tuned = tuned_vs_heuristic()
+        rows = sweep(img_size=args.img_size)
+        tuned = tuned_vs_heuristic(img_size=args.img_size)
+    if args.img_size != 28:
+        args.no_json = True             # trajectory tracks the paper shape
     if not args.no_json:
         trajectory_point(rows, tuned=tuned)
     _summary(rows, wrote_json=not args.no_json)

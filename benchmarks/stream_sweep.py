@@ -1,0 +1,246 @@
+"""Streaming spatial-tiler sweep — the >28×28 workload (DESIGN.md §13).
+
+The paper's accelerator never materializes a full feature map: the line
+buffer (§III.B.2) keeps K rows resident and streams the rest. The repo's
+analogue is ``repro.stream`` — over-budget conv / fused stages execute as
+halo-overlapped row bands with a *fixed* per-band working set. This bench
+runs a multi-block VGG-style CNN at ≥224×224 through both programs:
+
+  * ``streamed`` — ``VGGStyleCNN.compile()`` at the default
+    ``STREAM_VMEM_BUDGET_BYTES``: the early blocks exceed the budget and
+    execute as row bands,
+  * ``untiled``  — the same model compiled with an effectively infinite
+    ``stream_budget``, so every stage runs as one full-image launch,
+
+asserts the two are **bitwise-equal** per quant mode (banding never
+changes numerics — DESIGN.md §13's core invariant, enforced here on the
+real workload, not just unit shapes), and reports GOPS for both. Per
+tiled stage it records the tile shape and the band working set
+(``band_working_set`` — a function of tile_rows and W only, never H:
+the "fixed peak VMEM" the streaming design buys), plus the streamed
+input-row total whose excess over H is exactly (n_bands−1)·halo.
+
+A ``BENCH_stream.json`` trajectory point (per size × quant, with the
+per-stage tile table) is appended so later PRs can track the streaming
+overhead over time.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.graph.ir import Conv2DNode, FusedConvBlockNode
+from repro.graph.passes import stage_input_spec
+from repro.models.vgg import VGGStyleCNN, VGGStyleCNNConfig
+from repro.ops import ExecPolicy
+from repro.stream import (STREAM_VMEM_BUDGET_BYTES, band_working_set,
+                          conv_bands, image_working_set, pooled_bands,
+                          streamed_input_rows)
+
+SIZES = (224, 288)
+QUANTS = ("none", "qformat", "int8")
+UNTILED_BUDGET = 1 << 40                # "infinite": nothing ever tiles
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_stream.json"
+
+
+def stage_table(plan, budget: int) -> list[dict]:
+    """Per *tiled* stage: tile shape + the fixed band working set.
+
+    ``band_bytes`` is the per-image footprint of one band (input slab +
+    conv rows + pooled rows) — constant across bands and independent of
+    image height, which is the whole point of streaming. ``rows_streamed``
+    counts total input rows DMA'd including halo re-reads;
+    ``rows_streamed - h == (n_bands - 1) * halo`` exactly."""
+    rows = []
+    for node in plan.graph:
+        tiling = getattr(node, "tiling", None)
+        if tiling is None:
+            continue
+        in_spec = stage_input_spec(plan.graph, node)
+        _, n, h, w = in_spec.shape
+        m, _, kh, kw = node.w.shape
+        sh, sw = node.stride
+        oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
+        itemsize = np.dtype(in_spec.dtype).itemsize
+        if tiling.pooled:
+            bands = pooled_bands(oh // 2, tiling.tile_rows, kh, sh, h)
+            streamed = sum(hi - lo for _, _, lo, hi in bands)
+        else:
+            bands = conv_bands(oh, tiling.tile_rows, kh, sh)
+            streamed = streamed_input_rows(oh, tiling.tile_rows, kh, sh)
+        band_bytes = band_working_set(n, w, m, ow, tiling.tile_rows, kh, sh,
+                                      itemsize, pooled=tiling.pooled)
+        rows.append({
+            "stage": node.id,
+            "op": ("fused_conv_block"
+                   if isinstance(node, FusedConvBlockNode) else "conv2d"),
+            "in_hw": [h, w], "kernel": [kh, kw], "channels": [n, m],
+            "tile_rows": tiling.tile_rows, "halo": tiling.halo,
+            "pooled": tiling.pooled, "n_bands": len(bands),
+            "band_bytes": band_bytes,
+            "image_bytes": image_working_set(n, h, w, m, oh, ow, itemsize),
+            "rows_streamed": streamed,
+            "halo_overhead_rows": streamed - h,
+        })
+    return rows
+
+
+def sweep(sizes=SIZES, quants=QUANTS, *, budget: int | None = None,
+          warmup: int = 1, iters: int = 5) -> list[dict]:
+    """-> rows [{img_size, quant, stream_us, untiled_us, gops_stream,
+    gops_untiled, overhead, bitwise_equal, stages}]. Asserts streamed ==
+    untiled bitwise for every point — the bench doubles as the
+    large-image correctness gate."""
+    budget = STREAM_VMEM_BUDGET_BYTES if budget is None else budget
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for s in sizes:
+        cfg = VGGStyleCNNConfig(img_size=s)
+        model = VGGStyleCNN(cfg)
+        params = model.init(key)
+        x = jax.random.normal(jax.random.PRNGKey(1), model.input_shape(1))
+        flops1 = cfg.flops_per_image()
+        for quant in quants:
+            pol = ExecPolicy(quant=quant)
+            plan_s = model.compile(pol, stream_budget=budget)
+            plan_u = model.compile(pol, stream_budget=UNTILED_BUDGET)
+            stages = stage_table(plan_s, budget)
+            assert stages, (f"img_size={s}: no stage exceeded the "
+                            f"{budget}-byte budget — not a streaming "
+                            f"workload")
+            assert all(st["band_bytes"] <= budget or st["tile_rows"] == 1
+                       for st in stages), "band working set over budget"
+            bound_s, bound_u = plan_s.bind(params), plan_u.bind(params)
+            fn_s = jax.jit(lambda xx: bound_s(xx))
+            fn_u = jax.jit(lambda xx: bound_u(xx))
+            ys, yu = fn_s(x), fn_u(x)
+            bitwise = bool(np.array_equal(np.asarray(ys), np.asarray(yu)))
+            assert bitwise, (f"streamed != untiled at img_size={s} "
+                             f"quant={quant}")
+            t_s = time_fn(fn_s, x, warmup=warmup, iters=iters)
+            t_u = time_fn(fn_u, x, warmup=warmup, iters=iters)
+            row = {
+                "img_size": s, "quant": quant,
+                "stream_us": t_s, "untiled_us": t_u,
+                "gops_stream": flops1 / t_s / 1e3,
+                "gops_untiled": flops1 / t_u / 1e3,
+                "overhead": t_s / t_u,
+                "bitwise_equal": bitwise,
+                "tiled_stages": len(stages),
+                "stages": stages,
+            }
+            rows.append(row)
+            peak = max(st["band_bytes"] for st in stages)
+            emit(f"stream/{s}/{quant}/streamed", t_s,
+                 f"GOPS={row['gops_stream']:.2f};tiled_stages="
+                 f"{len(stages)};peak_band_bytes={peak};bitwise=ok")
+            emit(f"stream/{s}/{quant}/untiled", t_u,
+                 f"GOPS={row['gops_untiled']:.2f};"
+                 f"stream_overhead={row['overhead']:.2f}x")
+    return rows
+
+
+def check_schema(point: dict, *, smoke: bool = False) -> None:
+    """Schema gate for a BENCH_stream.json trajectory point (check.sh).
+    ``smoke`` relaxes only the ≥224 size requirement — a CI smoke sweep
+    streams a 64×64 model under a tiny budget but keeps every structural
+    and bitwise invariant."""
+    for k in ("bench", "platform", "budget_bytes", "points"):
+        assert k in point, f"missing key {k!r}"
+    assert point["bench"] == "stream_sweep"
+    assert point["points"], "no sweep points"
+    if not smoke:
+        assert any(p["img_size"] >= 224 for p in point["points"]), \
+            "no >=224 size in the sweep"
+    for p in point["points"]:
+        for k in ("img_size", "quant", "gops_stream", "gops_untiled",
+                  "overhead", "bitwise_equal", "stages"):
+            assert k in p, f"point missing key {k!r}"
+        assert p["bitwise_equal"] is True, "non-bitwise point recorded"
+        assert p["stages"], "point with no tiled stages"
+        for st in p["stages"]:
+            for k in ("stage", "op", "tile_rows", "halo", "pooled",
+                      "n_bands", "band_bytes", "image_bytes",
+                      "rows_streamed", "halo_overhead_rows"):
+                assert k in st, f"stage row missing key {k!r}"
+            assert st["halo_overhead_rows"] == \
+                (st["n_bands"] - 1) * st["halo"], "halo accounting broken"
+
+
+def trajectory_point(rows, path=BENCH_JSON, *, budget: int | None = None,
+                     smoke: bool = False) -> dict:
+    budget = STREAM_VMEM_BUDGET_BYTES if budget is None else budget
+    point = {
+        "bench": "stream_sweep",
+        "platform": jax.default_backend(),
+        "budget_bytes": budget,
+        "points": [{
+            "img_size": r["img_size"], "quant": r["quant"],
+            "gops_stream": round(r["gops_stream"], 3),
+            "gops_untiled": round(r["gops_untiled"], 3),
+            "overhead": round(r["overhead"], 3),
+            "bitwise_equal": r["bitwise_equal"],
+            "stages": r["stages"],
+        } for r in rows],
+        "note": ("streamed vs untiled is the same program content at two "
+                 "stream budgets; bitwise_equal is asserted, the overhead "
+                 "column is the halo re-read + per-band launch cost. "
+                 "band_bytes is per-band and H-independent — the fixed "
+                 "peak-VMEM claim of DESIGN.md §13"),
+    }
+    if smoke:
+        point["note"] = "smoke point (tiny size under a reduced budget)"
+    check_schema(point, smoke=smoke)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append(point)
+    path.write_text(json.dumps(history, indent=1) + "\n")
+    return point
+
+
+def _summary(rows, wrote_json: bool) -> None:
+    worst = max((r["overhead"] for r in rows), default=1.0)
+    tail = f";trajectory={BENCH_JSON.name}" if wrote_json else ""
+    emit("stream/summary", 0.0,
+         f"max_stream_overhead={worst:.2f}x;all_bitwise=ok{tail}")
+
+
+def run() -> None:
+    rows = sweep()
+    trajectory_point(rows)
+    _summary(rows, wrote_json=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI: one 64×64 size under a "
+                         "50 KiB budget, 2 iters, no json")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the BENCH_stream.json trajectory write")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the trajectory history to PATH instead "
+                         "of BENCH_stream.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        rows = sweep(sizes=(64,), budget=50_000, warmup=1, iters=2)
+    else:
+        rows = sweep()
+    wrote = False
+    if not args.no_json:
+        path = pathlib.Path(args.out) if args.out else BENCH_JSON
+        trajectory_point(rows, path, budget=50_000 if args.smoke else None,
+                         smoke=args.smoke)
+        wrote = True
+    _summary(rows, wrote_json=wrote)

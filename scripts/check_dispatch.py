@@ -38,7 +38,18 @@ and
     EXCEPT ``src/repro/serve/clock.py`` (the one sanctioned wrapper).
     All serving-layer timing goes through the injectable Clock seam
     (DESIGN.md §11) so the whole stack runs under virtual time in tests
-    — a raw clock read anywhere else silently breaks that determinism.
+    — a raw clock read anywhere else silently breaks that determinism;
+and
+
+  * a direct conv / fused-conv call (``conv2d`` / ``fused_conv_block`` /
+    ``conv2d_window`` / ``fused_conv_window`` or a string dispatch of
+    either op) with a ≥220 spatial literal in its neighborhood —
+    a full-frame launch far past the streaming budget — anywhere EXCEPT
+    ``src/repro/stream/`` (the banding executors), ``src/repro/graph/``
+    (the compiler that places tiling), ``src/repro/kernels/`` and
+    ``src/repro/ops/``. Large images go through compiled plans whose
+    placement pass bands them (DESIGN.md §13), never ad-hoc unfused
+    full-image dispatch.
 
 Tests are exempt — they pin the compat/eager behavior on purpose.
 """
@@ -83,6 +94,19 @@ TIME_SCAN_PREFIX = "src/repro/serve/"
 TIME_ALLOWED_FILES = ("src/repro/serve/clock.py",)
 TIME_RE = re.compile(r"\btime\.(monotonic|sleep|time|perf_counter)\s*\(")
 
+# direct full-image conv dispatch at streaming scale: a conv / fused-conv
+# call with a >=220 spatial literal in its neighborhood is a full-frame
+# launch far past STREAM_VMEM_BUDGET_BYTES — large images must go through
+# the compiled plan (whose placement pass bands them, DESIGN.md §13) or
+# repro.stream's executors, never an ad-hoc unfused dispatch
+STREAM_ALLOWED_PREFIXES = ("src/repro/stream/", "src/repro/graph/",
+                           "src/repro/kernels/", "src/repro/ops/")
+STREAM_WINDOW = 8                     # lines around the conv call to scan
+STREAM_CONV_RE = re.compile(
+    r"""\b(conv2d|fused_conv_block|conv2d_window|fused_conv_window)\s*\(|"""
+    r"""dispatch\s*\(\s*['"](conv2d|fused_conv_block)['"]""")
+STREAM_DIM_RE = re.compile(r"\b(2[2-9]\d|[3-9]\d\d|\d{4,})\b")
+
 
 def _chain_violations(rel: str, lines: list[str]) -> list[tuple]:
     out = []
@@ -93,6 +117,19 @@ def _chain_violations(rel: str, lines: list[str]) -> list[tuple]:
         if any(RELU_RE.search(l) for l in window) and \
                 any(POOL_RE.search(l) for l in window):
             out.append((rel, i + 1, "hand-rolled conv→relu→pool chain",
+                        line.strip()))
+    return out
+
+
+def _stream_scale_violations(rel: str, lines: list[str]) -> list[tuple]:
+    out = []
+    for i, line in enumerate(lines):
+        if not STREAM_CONV_RE.search(line):
+            continue
+        window = lines[max(0, i - STREAM_WINDOW):i + 1 + STREAM_WINDOW]
+        if any(STREAM_DIM_RE.search(l) for l in window):
+            out.append((rel, i + 1,
+                        "full-image conv dispatch at streaming scale",
                         line.strip()))
     return out
 
@@ -121,6 +158,8 @@ def main() -> int:
             if not rel.startswith(SHARD_ALLOWED_PREFIXES) \
                     and rel not in SHARD_ALLOWED_FILES:
                 violations.extend(_shard_conv_violations(rel, lines))
+            if not rel.startswith(STREAM_ALLOWED_PREFIXES):
+                violations.extend(_stream_scale_violations(rel, lines))
             if rel.startswith(TIME_SCAN_PREFIX) \
                     and rel not in TIME_ALLOWED_FILES:
                 for lineno, line in enumerate(lines, start=1):
@@ -143,8 +182,9 @@ def main() -> int:
               "(DESIGN.md §7), conv pipelines through repro.graph / "
               "fused_conv_block (DESIGN.md §8), sharded convs through "
               "core.parallelism via the placement pass (DESIGN.md §9), "
-              "and serving-layer timing through the repro.serve.clock "
-              "Clock seam (DESIGN.md §11)")
+              "serving-layer timing through the repro.serve.clock "
+              "Clock seam (DESIGN.md §11), and >=224-scale conv work "
+              "through compiled plans / repro.stream (DESIGN.md §13)")
         return 1
     print("dispatch gate OK")
     return 0

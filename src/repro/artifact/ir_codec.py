@@ -19,6 +19,7 @@ from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
                             FusedConvBlockNode, Graph, InputNode,
                             MaxPool2Node, ParamRef, QuantizeNode, ReluNode,
                             ShardingSpec, TensorSpec)
+from repro.stream.tiling import tiling_from_doc, tiling_to_doc
 
 __all__ = ["graph_to_doc", "graph_from_doc"]
 
@@ -75,7 +76,8 @@ def _node_doc(node) -> dict:
     if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
         doc.update(w=_ref_doc(node.w), b=_ref_doc(node.b),
                    stride=list(node.stride),
-                   sharding=_shard_doc(node.sharding))
+                   sharding=_shard_doc(node.sharding),
+                   tiling=tiling_to_doc(node.tiling))
         if isinstance(node, FusedConvBlockNode):
             doc["odd"] = node.odd
     elif isinstance(node, MaxPool2Node):
@@ -99,7 +101,8 @@ def _node_from(doc: dict):
     if cls in (Conv2DNode, FusedConvBlockNode):
         kw.update(w=_ref_from(doc["w"]), b=_ref_from(doc["b"]),
                   stride=tuple(doc["stride"]),
-                  sharding=_shard_from(doc.get("sharding")))
+                  sharding=_shard_from(doc.get("sharding")),
+                  tiling=tiling_from_doc(doc.get("tiling")))
         if cls is FusedConvBlockNode:
             kw["odd"] = doc["odd"]
     elif cls is MaxPool2Node:

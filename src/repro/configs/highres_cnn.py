@@ -1,0 +1,19 @@
+"""High-resolution streaming workload: multi-block VGG-style CNN at
+224×224 (DESIGN.md §13). The early blocks exceed the streaming VMEM
+budget and execute as halo-overlapped row bands through repro.stream.
+
+Not part of the assigned 40-cell pool; used by ``benchmarks/
+stream_sweep.py`` and ``launch/serve.py --arch highres_cnn``.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.vgg import VGGStyleCNN, VGGStyleCNNConfig
+
+CONFIG = VGGStyleCNNConfig()
+
+ARCH = ArchSpec(
+    arch_id="highres_cnn", family="cnn",
+    build=lambda: VGGStyleCNN(CONFIG),
+    source="VGG-style stack (survey arXiv:1806.01683 §streaming dataflow)",
+    notes="224x224x3; conv5x5x8 + 3 conv3x3 blocks (each fused conv+relu+"
+          "pool) -> fc10; early stages spatially tiled via repro.stream.",
+)

@@ -17,9 +17,12 @@ _MODULES = {
     "zamba2-7b": "repro.configs.zamba2_7b",
     "rwkv6-1.6b": "repro.configs.rwkv6_16b",
     "mnist_cnn": "repro.configs.mnist_cnn",
+    "highres_cnn": "repro.configs.highres_cnn",
 }
 
-ARCH_IDS = [a for a in _MODULES if a != "mnist_cnn"]
+# the vision workloads are servable via --arch but outside the assigned
+# LM shape-grid pool
+ARCH_IDS = [a for a in _MODULES if a not in ("mnist_cnn", "highres_cnn")]
 SHAPE_IDS = list(SHAPES)
 
 

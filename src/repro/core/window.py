@@ -96,9 +96,16 @@ def maxpool2(x: jax.Array, *, odd: str = "raise") -> jax.Array:
         x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
 
 
-def fill_latency(k: int, w: int) -> int:
-    """Paper Fig. 8: invalid/fill cycles T_u = (K-1)·W + K - 1."""
-    return (k - 1) * w + k - 1
+def fill_latency(k: int, w: int, kw: int | None = None) -> int:
+    """Paper Fig. 8: invalid/fill cycles T_u = (K-1)·W + K - 1.
+
+    Generalized to a non-square Kh×Kw window (``k`` rows, ``kw`` cols,
+    default square): T_u = (Kh-1)·W + Kw - 1 — Kh-1 full rows must be
+    resident plus Kw-1 pixels of the current row. The Kh-1 resident rows
+    are exactly the streaming tiler's stride-1 halo
+    (``repro.stream.halo_rows(kh, 1)``)."""
+    kw = k if kw is None else kw
+    return (k - 1) * w + kw - 1
 
 
 def reuse_ratio(k: int) -> float:
@@ -125,60 +132,80 @@ class LineBufferSim:
 
     The five steps of §III.B.2 happen in parallel: each cycle computes all
     reads from the *previous* cycle's register values.
+
+    ``k`` may be a (Kh, Kw) pair for non-square windows: WB becomes
+    Kh×Kw, SB becomes (Kh-1)×(W-Kw), and T_u = (Kh-1)·W + Kw - 1 — the
+    reference model for the streaming tiler's halo accounting
+    (repro.stream, DESIGN.md §13).
     """
 
-    def __init__(self, k: int, w: int):
-        if k < 1 or w < k:
-            raise ValueError(f"need 1 <= K <= W, got K={k} W={w}")
-        self.k, self.w = k, w
-        self.wb = np.full((k, k), np.nan)
-        self.sb = np.full((max(k - 1, 0), max(w - k, 0)), np.nan)
+    def __init__(self, k: int | tuple[int, int], w: int):
+        kh, kw = (k, k) if isinstance(k, int) else k
+        if kh < 1 or kw < 1 or w < kw:
+            raise ValueError(f"need Kh >= 1 and 1 <= Kw <= W, "
+                             f"got Kh={kh} Kw={kw} W={w}")
+        self.k = k                        # as given (int for square windows)
+        self.kh, self.kw, self.w = kh, kw, w
+        self.wb = np.full((kh, kw), np.nan)
+        self.sb = np.full((max(kh - 1, 0), max(w - kw, 0)), np.nan)
         self.cycle = 0  # number of pixels streamed so far
 
     def step(self, value: float) -> None:
         """Stream one pixel (row-major image order). One clock cycle."""
-        k, w = self.k, self.w
+        kh, kw, w = self.kh, self.kw, self.w
         wb_old, sb_old = self.wb.copy(), self.sb.copy()
         # (2) WINDOW_BUFFER right shift
         self.wb[:, 1:] = wb_old[:, :-1]
-        # (3)+(4) exits of WB rows 1..K-1 enter SHIFT_BUFFER, which shifts
-        if k > 1:
-            if w > k:
+        # (3)+(4) exits of WB rows 1..Kh-1 enter SHIFT_BUFFER, which shifts
+        if kh > 1:
+            if w > kw:
                 self.sb[:, 1:] = sb_old[:, :-1]
-                self.sb[:, 0] = wb_old[1:, k - 1]
-                # (5) SHIFT_BUFFER exits feed WB rows 0..K-2, col 0
-                self.wb[:k - 1, 0] = sb_old[:, w - k - 1]
-            else:  # W == K: no shift buffer, exits feed the row above directly
-                self.wb[:k - 1, 0] = wb_old[1:, k - 1]
+                self.sb[:, 0] = wb_old[1:, kw - 1]
+                # (5) SHIFT_BUFFER exits feed WB rows 0..Kh-2, col 0
+                self.wb[:kh - 1, 0] = sb_old[:, w - kw - 1]
+            else:  # W == Kw: no shift buffer, exits feed the row above
+                self.wb[:kh - 1, 0] = wb_old[1:, kw - 1]
         # (1) new datum enters the bottom row, col 0
-        self.wb[k - 1, 0] = value
+        self.wb[kh - 1, 0] = value
         self.cycle += 1
 
     @property
     def window(self) -> np.ndarray:
-        """Current K×K window in image orientation (columns un-reversed)."""
+        """Current Kh×Kw window in image orientation (columns
+        un-reversed)."""
         return self.wb[:, ::-1].copy()
 
     def window_valid(self) -> bool:
         """True when WB holds a complete in-image window (Fig. 8's valid
         region): past the fill latency and not wrapping a row boundary."""
         t = self.cycle
-        if t <= fill_latency(self.k, self.w):
+        if t <= fill_latency(self.kh, self.w, self.kw):
             return False
         col = (t - 1) % self.w + 1  # 1-indexed column of the newest pixel
-        return col >= self.k
+        return col >= self.kw
 
-    def run(self, image: np.ndarray):
+    def run(self, image: np.ndarray,
+            stride: tuple[int, int] = (1, 1)):
         """Stream a full (H, W) image; yield (cycle, row, col, window) for
-        every valid stride-1 window, in paper order x_(1) … x_(H0·W0)."""
+        every valid window, in paper order x_(1) … x_(H0·W0).
+
+        ``stride`` keeps the dataflow untouched — the buffers shift every
+        cycle regardless (the hardware cannot skip pixels) — and simply
+        gates the *readout* to the VALID-conv stride grid: windows whose
+        top-left corner (row, col) has row % sh == 0 and col % sw == 0.
+        That is how the paper's machine realizes Eq. (1)-(2) strides: same
+        fill latency, fewer valid readouts."""
         h, w = image.shape
+        sh, sw = stride
         assert w == self.w
         for i in range(h):
             for j in range(w):
                 self.step(float(image[i, j]))
                 if self.window_valid():
                     # newest pixel (i, j) is the window's bottom-right corner
-                    yield self.cycle, i - self.k + 1, j - self.k + 1, self.window
+                    r, c = i - self.kh + 1, j - self.kw + 1
+                    if r % sh == 0 and c % sw == 0:
+                        yield self.cycle, r, c, self.window
 
 
 def extract_windows(x: jax.Array, k: tuple[int, int],

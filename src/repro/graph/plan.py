@@ -148,6 +148,18 @@ class ExecutionPlan:
                 # single-device (or pure-data-parallel: XLA propagates the
                 # caller's batch sharding through elementwise stages)
                 pol = self._stage_policy(base, tuned.get(node.id))
+                tiling = getattr(node, "tiling", None)
+                if tiling is not None:
+                    # over-budget stage: stream halo-overlapped row bands
+                    # through the same op registry (DESIGN.md §13)
+                    from repro.stream.executor import (
+                        stream_conv2d, stream_fused_conv_block)
+                    if fused:
+                        return stream_fused_conv_block(
+                            xin, wv, bv, stride=node.stride, odd=node.odd,
+                            tiling=tiling, policy=pol)
+                    return stream_conv2d(xin, wv, bv, stride=node.stride,
+                                         tiling=tiling, policy=pol)
                 if fused:
                     return fused_conv_block(xin, wv, bv, stride=node.stride,
                                             odd=node.odd, policy=pol)
@@ -273,8 +285,11 @@ class ExecutionPlan:
             spec = stage_input_spec(self.graph, node)
             x = jnp.asarray(rng.standard_normal(spec.shape), spec.dtype)
             if isinstance(node, (Conv2DNode, FusedConvBlockNode)):
-                op = ("fused_conv_block"
-                      if isinstance(node, FusedConvBlockNode) else "conv2d")
+                fused = isinstance(node, FusedConvBlockNode)
+                tiling = getattr(node, "tiling", None)
+                op = "fused_conv_block" if fused else "conv2d"
+                if tiling is not None:      # streamed stage: tune th instead
+                    op = "stream_" + op
                 wv = (folded[node.inputs[1]] if len(node.inputs) > 1
                       else node.w.fetch(params))
                 bv = (folded.get(node.inputs[2])
@@ -287,8 +302,14 @@ class ExecutionPlan:
                 else:
                     w_arr = wv
                 kw = dict(stride=node.stride)
-                if op == "fused_conv_block":
+                if tiling is not None:
+                    kw["tiling"] = tiling
+                if fused:
                     kw["scale"] = scale     # the in-kernel requant epilogue
+                    if tiling is not None:
+                        kw["odd"] = node.odd
+                elif tiling is not None:
+                    kw["scale"] = scale
                 yield node, op, (x, w_arr, bv), kw
             else:                           # DenseNode
                 wq = folded.get(node.id)
@@ -482,6 +503,7 @@ class BoundPlan:
 def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
                   policy: ExecPolicy | None = None, fuse: bool = True,
                   mesh: Mesh | None = None, autotune: bool = False,
+                  stream_budget: int | None = None,
                   dtype: str = "float32") -> ExecutionPlan:
     """trace → passes → plan for any model whose forward routes through
     the hooked functional layer (DESIGN.md §8).
@@ -498,6 +520,11 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
     ``autotune=True`` (or ``ExecPolicy.autotune``) defers to DESIGN.md
     §10: ``plan.bind`` measures tile candidates per stage (tuning-cache
     hits skip the measurement) and bakes the winners into the BoundPlan.
+
+    ``stream_budget`` (bytes, default
+    ``repro.stream.STREAM_VMEM_BUDGET_BYTES``) is the per-image stage
+    footprint above which conv/fused stages get a ``SpatialTiling`` and
+    execute as halo-overlapped row bands (DESIGN.md §13).
     """
     if input_shape is None:
         input_shape = model.input_shape()
@@ -523,6 +550,12 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
                 graph, mesh.shape["model"],
                 override=quant_pol.channel_parallel,
                 data="data" in mesh.axis_names)
+    # streaming spatial tiling (DESIGN.md §13): stamp over-budget stages.
+    # Runs on every compile — under-budget graphs (all MNIST-sized plans)
+    # come back node-for-node identical, so fingerprints are unchanged.
+    from repro.stream.passes import place_spatial_tiling
+    with phase("place"):
+        graph = place_spatial_tiling(graph, budget_bytes=stream_budget)
     return ExecutionPlan(graph=graph, quant=quant_pol.quant,
                          qformat=quant_pol.qformat, compile_policy=pol,
                          mesh=mesh,

@@ -10,6 +10,7 @@ from repro.core.window import (LineBufferSim, conv2d_im2col, conv2d_ref,
                                conv_output_size, extract_windows,
                                fill_latency, maxpool2, pool_output_size,
                                reuse_ratio)
+from repro.stream import band_input_rows, halo_rows, streamed_input_rows
 
 
 class TestLaws:
@@ -97,6 +98,90 @@ class TestLineBufferProperties:
         w = data.draw(st.integers(k, k + 8))
         h = data.draw(st.integers(k, k + 6))
         _check_linebuffer_laws(k, w, h)
+
+
+def _check_strided_laws(kh: int, kw: int, w: int, h: int,
+                        sh: int, sw: int) -> None:
+    """Strided / non-square property check: the buffers shift every cycle
+    (same dataflow, same T_u), the readout hits exactly the Eq. (1)-(2)
+    stride grid, and every window content is exact."""
+    img = np.arange(h * w, dtype=np.float32).reshape(h, w)
+    sim = LineBufferSim((kh, kw), w)
+    wins = list(sim.run(img, stride=(sh, sw)))
+    ho, wo = (h - kh) // sh + 1, (w - kw) // sw + 1
+    assert len(wins) == ho * wo
+    # stride gates readout only: first valid window still lands the
+    # cycle after T_u = (Kh-1)·W + Kw - 1 (top-left corner (0,0) is
+    # always on the stride grid)
+    assert wins[0][0] == fill_latency(kh, w, kw) + 1
+    for cyc, r, c, win in wins:
+        assert r % sh == 0 and c % sw == 0
+        np.testing.assert_array_equal(win, img[r:r + kh, c:c + kw])
+    # readout positions are exactly the VALID-conv grid
+    assert [(r, c) for _, r, c, _ in wins] == \
+        [(r * sh, c * sw) for r in range(ho) for c in range(wo)]
+
+
+class TestLineBufferStrideNonSquare:
+    """§III.B.2 generalized: stride > 1 (readout gating, same fill
+    latency) and non-square Kh×Kw windows — the reference model for the
+    streaming tiler's halo accounting (repro.stream, DESIGN.md §13)."""
+
+    @pytest.mark.parametrize("kh,kw,w,h,sh,sw",
+                             [(3, 3, 9, 7, 2, 2),     # square, strided
+                              (3, 3, 11, 9, 2, 1),
+                              (6, 6, 13, 13, 2, 2),   # paper conv2, s=2
+                              (2, 5, 11, 8, 1, 1),    # wide window
+                              (5, 2, 7, 9, 1, 1),     # tall window
+                              (4, 3, 10, 10, 3, 2),   # mixed strides
+                              (1, 3, 8, 5, 2, 2)])    # single-row window
+    def test_sweep(self, kh, kw, w, h, sh, sw):
+        _check_strided_laws(kh, kw, w, h, sh, sw)
+
+    def test_non_square_storage(self):
+        """WB Kh×Kw + SB (Kh-1)×(W-Kw) — Fig. 7 with a non-square window."""
+        sim = LineBufferSim((2, 5), 9)
+        assert sim.wb.shape == (2, 5)
+        assert sim.sb.shape == (1, 4)
+        assert fill_latency(2, 9, 5) == 1 * 9 + 4
+
+    @given(st.integers(1, 5), st.integers(1, 5), st.integers(1, 3),
+           st.integers(1, 3), st.data())
+    @settings(max_examples=40, deadline=None)
+    def test_hypothesis_strided(self, kh, kw, sh, sw, data):
+        w = data.draw(st.integers(kw, kw + 7))
+        h = data.draw(st.integers(kh, kh + 6))
+        _check_strided_laws(kh, kw, w, h, sh, sw)
+
+    def test_halo_accounting_matches_stream(self):
+        """The tiler's halo IS the line buffer's resident-row count: at
+        stride 1, halo_rows(k) == K-1 shift-buffer rows, and
+        halo_rows(k)/k equals the paper's (K-1)/K reuse ratio; the fill
+        latency is exactly those resident rows plus the Kw-1 lead-in."""
+        for k in range(1, 8):
+            assert halo_rows(k, 1) == k - 1
+            assert halo_rows(k, 1) / k == pytest.approx(reuse_ratio(k))
+        for kh, kw, w in [(3, 3, 8), (4, 2, 9), (2, 5, 11), (6, 6, 13)]:
+            assert fill_latency(kh, w, kw) == halo_rows(kh, 1) * w + kw - 1
+
+    def test_band_rows_are_line_buffer_spans(self):
+        """A 1-row band reads exactly Kh rows (the window) and each extra
+        output row costs sh more — the vertical form of the line buffer's
+        fill+stream law."""
+        for kh, sh in [(3, 1), (3, 2), (5, 2), (6, 1)]:
+            assert band_input_rows(1, kh, sh) == kh
+            assert band_input_rows(4, kh, sh) - \
+                band_input_rows(3, kh, sh) == sh
+
+    def test_streamed_rows_identity(self):
+        """Total rows DMA'd = untiled rows + (n_bands - 1)·halo — the
+        halo re-read is the entire streaming overhead."""
+        for out_rows, tile, kh, sh in [(26, 7, 3, 1), (8, 3, 6, 1),
+                                       (13, 4, 3, 2), (10, 10, 5, 1)]:
+            untiled = (out_rows - 1) * sh + kh
+            nbands = -(-out_rows // tile)
+            assert streamed_input_rows(out_rows, tile, kh, sh) == \
+                untiled + (nbands - 1) * halo_rows(kh, sh)
 
 
 class TestMaxPool2:
