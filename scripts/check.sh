@@ -4,6 +4,16 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# single EXIT trap over an accumulating list: `trap ... EXIT` overwrites
+# any previous handler, so steps register cleanups here instead of
+# installing their own trap (which would silently leak earlier tempdirs)
+CLEANUPS=()
+run_cleanups() {
+  local d
+  for d in ${CLEANUPS[@]+"${CLEANUPS[@]}"}; do rm -rf "$d"; done
+}
+trap run_cleanups EXIT
+
 echo "== tracked-bytecode gate (no committed __pycache__/*.pyc) =="
 if git ls-files | grep -q '\.pyc$'; then
   echo "FAIL: tracked .pyc files:"
@@ -14,8 +24,8 @@ fi
 echo "== docs link check (DESIGN.md §N references) =="
 python scripts/check_docs_links.py
 
-echo "== dispatch grep-gate (no path=/interpret= plumbing outside ops) =="
-python scripts/check_dispatch.py
+echo "== static analysis (AST lint rules + compile-time plan verifier) =="
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.analysis
 
 # the full tier-1 run already collects the parity + graph + shard suites;
 # run them as their own step only when pytest args narrow the tier-1
@@ -30,7 +40,7 @@ PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.pipeline_sweep 
 
 echo "== tuning-cache persistence smoke (write in one process, load+use in a fresh one) =="
 TUNE_TMP="$(mktemp -d)"
-trap 'rm -rf "$TUNE_TMP"' EXIT
+CLEANUPS+=("$TUNE_TMP")
 PYTHONPATH=src python - "$TUNE_TMP/cache.json" <<'PY'
 import sys
 import jax

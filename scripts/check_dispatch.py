@@ -1,193 +1,44 @@
 #!/usr/bin/env python
-"""Dispatch grep-gate: string/bool execution-path plumbing is banned
-outside the ops layer, and hand-rolled conv→relu→pool chains are banned
-outside the graph/model/kernel layers.
+"""DEPRECATED: the regex grep-gate, superseded by ``repro.analysis``.
 
-The op registry (repro.ops, DESIGN.md §7) is the single dispatch surface
-and the graph compiler (repro.graph, DESIGN.md §8) is the single home of
-the conv-block pipeline. This gate fails the build if the pre-registry /
-pre-compiler idioms reappear in the product tree:
+Every pattern this script used to grep for is now an AST rule in
+``src/repro/analysis/rules.py`` (same path scoping, same proximity
+windows), run by ``python -m repro.analysis`` from ``scripts/check.sh``.
+The AST port also catches what these regexes structurally could not —
+e.g. ``TIME_RE`` below misses ``import time as t; t.monotonic()`` and
+``from time import monotonic`` entirely (see
+``tests/test_analysis.py::TestLegacyRegexBlindSpots``).
 
-  * ``path="ref" | "im2col" | "kernel"`` string dispatch, or
-  * hardcoded ``interpret=True/False`` literals
-
-anywhere in ``src/repro``, ``benchmarks`` or ``examples`` EXCEPT the
-sanctioned layers: ``src/repro/ops/`` (the registry itself),
-``src/repro/kernels/`` (the backend implementations the registry routes
-to), and ``src/repro/core/conv.py`` (the legacy-string deprecation shim);
-and
-
-  * a ``conv2d_apply(...)`` call followed within a few lines by ``relu``
-    and a pooling call (``maxpool2`` / ``reduce_window``) — the unfused
-    layer chain that ``fused_conv_block`` / ``PaperCNN.compile()``
-    replaces — anywhere EXCEPT ``src/repro/graph/`` (the compiler),
-    ``src/repro/models/`` (the traceable forward definitions) and
-    ``src/repro/kernels/`` (the fused backends themselves);
-and
-
-  * a hand-rolled ``shard_map`` over a conv (a ``shard_map(`` call with a
-    conv/fused-conv dispatch in its neighborhood) anywhere EXCEPT
-    ``src/repro/core/parallelism.py`` (the paper-Eq. 6/7 schedules) and
-    ``src/repro/graph/`` (the compiler that routes placed stages there) —
-    new channel-parallel conv paths must go through the placement pass
-    (DESIGN.md §9), not ad-hoc collectives;
-and
-
-  * direct ``time.monotonic()`` / ``time.sleep()`` / ``time.time()`` /
-    ``time.perf_counter()`` calls anywhere in ``src/repro/serve/``
-    EXCEPT ``src/repro/serve/clock.py`` (the one sanctioned wrapper).
-    All serving-layer timing goes through the injectable Clock seam
-    (DESIGN.md §11) so the whole stack runs under virtual time in tests
-    — a raw clock read anywhere else silently breaks that determinism;
-and
-
-  * a direct conv / fused-conv call (``conv2d`` / ``fused_conv_block`` /
-    ``conv2d_window`` / ``fused_conv_window`` or a string dispatch of
-    either op) with a ≥220 spatial literal in its neighborhood —
-    a full-frame launch far past the streaming budget — anywhere EXCEPT
-    ``src/repro/stream/`` (the banding executors), ``src/repro/graph/``
-    (the compiler that places tiling), ``src/repro/kernels/`` and
-    ``src/repro/ops/``. Large images go through compiled plans whose
-    placement pass bands them (DESIGN.md §13), never ad-hoc unfused
-    full-image dispatch.
-
-Tests are exempt — they pin the compat/eager behavior on purpose.
+This shim delegates to the new gate so any pipeline still invoking
+``scripts/check_dispatch.py`` keeps working; ``TIME_RE`` stays
+importable because the regression test pins the old blind spot against
+it. Remove after one deprecation cycle.
 """
 from __future__ import annotations
 
+import os
 import pathlib
 import re
+import subprocess
 import sys
 
-ROOT = pathlib.Path(__file__).resolve().parent.parent
-SCAN_DIRS = ("src/repro", "benchmarks", "examples")
-ALLOWED_PREFIXES = ("src/repro/ops/", "src/repro/kernels/")
-ALLOWED_FILES = ("src/repro/core/conv.py",)
-
-PATTERNS = (
-    ("path-string dispatch",
-     re.compile(r"""path\s*=\s*["'](ref|im2col|kernel)["']""")),
-    ("hardcoded interpret literal",
-     re.compile(r"""interpret\s*=\s*(True|False)\b""")),
-)
-
-# hand-rolled conv-block pipeline: conv2d_apply then relu+pool nearby
-CHAIN_ALLOWED_PREFIXES = ("src/repro/graph/", "src/repro/models/",
-                          "src/repro/kernels/")
-CHAIN_WINDOW = 4                      # lines after the conv call to scan
-CONV_RE = re.compile(r"\bconv2d_apply\s*\(")
-RELU_RE = re.compile(r"\brelu\s*\(")
-POOL_RE = re.compile(r"\b(maxpool2|reduce_window)\s*\(")
-
-# hand-rolled channel-parallel conv: shard_map with a conv dispatch nearby
-# (the local body is defined just above the shard_map call)
-SHARD_ALLOWED_PREFIXES = ("src/repro/graph/",)
-SHARD_ALLOWED_FILES = ("src/repro/core/parallelism.py",)
-SHARD_WINDOW = 15                     # lines around shard_map( to scan
-SHARD_RE = re.compile(r"\bshard_map\s*\(")
-SHARD_CONV_RE = re.compile(
-    r"""\b(conv2d\w*|fused_conv\w*|_conv)\s*\(|['"](conv2d|fused_conv_block)['"]""")
-
-# raw clock reads in the serving layer: the Clock seam (DESIGN.md §11) is
-# the only sanctioned wrapper around the time module there
-TIME_SCAN_PREFIX = "src/repro/serve/"
-TIME_ALLOWED_FILES = ("src/repro/serve/clock.py",)
+# The legacy serve-layer clock regex, verbatim. Its blind spots (aliased
+# and from-imports) are what motivated the AST port — do not "fix" it;
+# the exact historical form is the regression-test fixture.
 TIME_RE = re.compile(r"\btime\.(monotonic|sleep|time|perf_counter)\s*\(")
-
-# direct full-image conv dispatch at streaming scale: a conv / fused-conv
-# call with a >=220 spatial literal in its neighborhood is a full-frame
-# launch far past STREAM_VMEM_BUDGET_BYTES — large images must go through
-# the compiled plan (whose placement pass bands them, DESIGN.md §13) or
-# repro.stream's executors, never an ad-hoc unfused dispatch
-STREAM_ALLOWED_PREFIXES = ("src/repro/stream/", "src/repro/graph/",
-                           "src/repro/kernels/", "src/repro/ops/")
-STREAM_WINDOW = 8                     # lines around the conv call to scan
-STREAM_CONV_RE = re.compile(
-    r"""\b(conv2d|fused_conv_block|conv2d_window|fused_conv_window)\s*\(|"""
-    r"""dispatch\s*\(\s*['"](conv2d|fused_conv_block)['"]""")
-STREAM_DIM_RE = re.compile(r"\b(2[2-9]\d|[3-9]\d\d|\d{4,})\b")
-
-
-def _chain_violations(rel: str, lines: list[str]) -> list[tuple]:
-    out = []
-    for i, line in enumerate(lines):
-        if not CONV_RE.search(line):
-            continue
-        window = lines[i:i + 1 + CHAIN_WINDOW]
-        if any(RELU_RE.search(l) for l in window) and \
-                any(POOL_RE.search(l) for l in window):
-            out.append((rel, i + 1, "hand-rolled conv→relu→pool chain",
-                        line.strip()))
-    return out
-
-
-def _stream_scale_violations(rel: str, lines: list[str]) -> list[tuple]:
-    out = []
-    for i, line in enumerate(lines):
-        if not STREAM_CONV_RE.search(line):
-            continue
-        window = lines[max(0, i - STREAM_WINDOW):i + 1 + STREAM_WINDOW]
-        if any(STREAM_DIM_RE.search(l) for l in window):
-            out.append((rel, i + 1,
-                        "full-image conv dispatch at streaming scale",
-                        line.strip()))
-    return out
-
-
-def _shard_conv_violations(rel: str, lines: list[str]) -> list[tuple]:
-    out = []
-    for i, line in enumerate(lines):
-        if not SHARD_RE.search(line):
-            continue
-        window = lines[max(0, i - SHARD_WINDOW):i + 1 + SHARD_WINDOW]
-        if any(SHARD_CONV_RE.search(l) for l in window):
-            out.append((rel, i + 1, "hand-rolled shard_map over conv",
-                        line.strip()))
-    return out
 
 
 def main() -> int:
-    violations = []
-    scanned = 0
-    for d in SCAN_DIRS:
-        for path in sorted((ROOT / d).rglob("*.py")):
-            rel = path.relative_to(ROOT).as_posix()
-            lines = path.read_text().splitlines()
-            if not rel.startswith(CHAIN_ALLOWED_PREFIXES):
-                violations.extend(_chain_violations(rel, lines))
-            if not rel.startswith(SHARD_ALLOWED_PREFIXES) \
-                    and rel not in SHARD_ALLOWED_FILES:
-                violations.extend(_shard_conv_violations(rel, lines))
-            if not rel.startswith(STREAM_ALLOWED_PREFIXES):
-                violations.extend(_stream_scale_violations(rel, lines))
-            if rel.startswith(TIME_SCAN_PREFIX) \
-                    and rel not in TIME_ALLOWED_FILES:
-                for lineno, line in enumerate(lines, start=1):
-                    if TIME_RE.search(line):
-                        violations.append(
-                            (rel, lineno,
-                             "raw time.* in the serving layer", line.strip()))
-            if rel.startswith(ALLOWED_PREFIXES) or rel in ALLOWED_FILES:
-                continue
-            scanned += 1
-            for lineno, line in enumerate(lines, start=1):
-                for label, rx in PATTERNS:
-                    if rx.search(line):
-                        violations.append((rel, lineno, label, line.strip()))
-    print(f"dispatch gate: scanned {scanned} files in {SCAN_DIRS}")
-    if violations:
-        for rel, lineno, label, line in violations:
-            print(f"FAIL: {rel}:{lineno} [{label}] {line}")
-        print("route execution choices through repro.ops ExecPolicy "
-              "(DESIGN.md §7), conv pipelines through repro.graph / "
-              "fused_conv_block (DESIGN.md §8), sharded convs through "
-              "core.parallelism via the placement pass (DESIGN.md §9), "
-              "serving-layer timing through the repro.serve.clock "
-              "Clock seam (DESIGN.md §11), and >=224-scale conv work "
-              "through compiled plans / repro.stream (DESIGN.md §13)")
-        return 1
-    print("dispatch gate OK")
-    return 0
+    root = pathlib.Path(__file__).resolve().parent.parent
+    print("scripts/check_dispatch.py is deprecated; running "
+          "`python -m repro.analysis --lint-only` instead", file=sys.stderr)
+    env = {**os.environ,
+           "PYTHONPATH": str(root / "src")
+           + (os.pathsep + os.environ["PYTHONPATH"]
+              if os.environ.get("PYTHONPATH") else "")}
+    return subprocess.call(
+        [sys.executable, "-m", "repro.analysis", "--lint-only",
+         "--root", str(root)], env=env)
 
 
 if __name__ == "__main__":

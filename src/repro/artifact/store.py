@@ -412,6 +412,19 @@ def load_plan(path, *, params=None) -> PlanArtifact:
         placed = plan._place_weights(loaded_params, folded)
         bound = BoundPlan(plan=plan, params=loaded_params, folded=folded,
                           policy=bind_policy, placed=placed, tuned=tuned)
+
+        # static verification (DESIGN.md §14): a manifest can pass the
+        # fingerprint check and still describe an illegal plan (written
+        # by a buggy or adversarial producer with a recomputed
+        # fingerprint) — re-derive every invariant before serving it
+        from repro.analysis.verifier import PlanVerificationError, \
+            verify_plan
+        try:
+            verify_plan(bound)
+        except PlanVerificationError as e:
+            raise ArtifactError(
+                f"plan artifact {path}: failed static verification — "
+                + "; ".join(v.render() for v in e.violations)) from e
     return PlanArtifact(bound=bound, fingerprint=fp, manifest=manifest,
                         path=path)
 

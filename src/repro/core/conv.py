@@ -11,7 +11,7 @@ string spelling still works — ``path`` maps through
 ``repro.ops.compat.policy_from_legacy`` (``ref``→``ref``,
 ``im2col``→``xla``, ``kernel``→``pallas``) with a DeprecationWarning. This
 file is the only sanctioned home of that mapping outside ``repro.ops``
-(enforced by scripts/check_dispatch.py).
+(enforced by the ``string-dispatch`` lint rule, DESIGN.md §14).
 
 ``CausalConv1D``: the 1-D window pipeline used by Mamba2/RWKV token-shift
 (DESIGN.md §5) — ``causal_conv1d`` is re-exported from the op registry;

@@ -34,8 +34,9 @@ Two op families get schedules here:
   wrong, which is why the psum sits between the conv and the epilogue.
 
 This module is the single sanctioned home of ``shard_map``-over-conv
-(enforced by scripts/check_dispatch.py); the graph compiler routes sharded
-plan stages here, never hand-rolls its own collective.
+(enforced by the ``shard-map-conv`` lint rule, DESIGN.md §14); the graph
+compiler routes sharded plan stages here, never hand-rolls its own
+collective.
 """
 from __future__ import annotations
 

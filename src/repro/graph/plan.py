@@ -389,8 +389,8 @@ class ExecutionPlan:
                                                     axis=0)
         return folded
 
-    def bind(self, params, *, policy: ExecPolicy | None = None
-             ) -> "BoundPlan":
+    def bind(self, params, *, policy: ExecPolicy | None = None,
+             verify: bool = True) -> "BoundPlan":
         """Fold weight quantization against ``params`` now: every
         constant QuantizeNode (conv weights/biases), plus — under int8 —
         each dense layer's per-output-channel QTensor, so per-batch calls
@@ -400,15 +400,25 @@ class ExecutionPlan:
         ShardingSpec, so binding is a one-time placement and per-batch
         calls start from resident shards. On an ``autotune=True`` plan the
         measured tile winners are baked in here too — the per-batch call
-        runs on tuned tiles without ever touching the tuner or the cache."""
+        runs on tuned tiles without ever touching the tuner or the cache.
+
+        ``verify=True`` (the default) re-runs the static verifier
+        (DESIGN.md §14) over the bound plan, adding the bound-level
+        checks: folded QTensor codes/scale shapes match their stages,
+        every fingerprint input serializes. Read-only — the BoundPlan
+        is identical with or without it."""
         folded = self._fold_constants(params)
         tuned: dict = {}
         if self.autotune:
             with phase("tune"):
                 tuned = self._autotune_stages(params, folded, policy=policy)
         placed = self._place_weights(params, folded)
-        return BoundPlan(plan=self, params=params, folded=folded,
-                         policy=policy, placed=placed, tuned=tuned)
+        bound = BoundPlan(plan=self, params=params, folded=folded,
+                          policy=policy, placed=placed, tuned=tuned)
+        if verify:
+            from repro.analysis.verifier import verify_plan
+            verify_plan(bound)
+        return bound
 
     def _place_weights(self, params, folded: dict) -> dict:
         """The mesh half of ``bind``: ``device_put`` every sharded conv
@@ -504,7 +514,8 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
                   policy: ExecPolicy | None = None, fuse: bool = True,
                   mesh: Mesh | None = None, autotune: bool = False,
                   stream_budget: int | None = None,
-                  dtype: str = "float32") -> ExecutionPlan:
+                  dtype: str = "float32",
+                  verify: bool = True) -> ExecutionPlan:
     """trace → passes → plan for any model whose forward routes through
     the hooked functional layer (DESIGN.md §8).
 
@@ -525,6 +536,13 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
     ``repro.stream.STREAM_VMEM_BUDGET_BYTES``) is the per-image stage
     footprint above which conv/fused stages get a ``SpatialTiling`` and
     execute as halo-overlapped row bands (DESIGN.md §13).
+
+    ``verify=True`` (the default) runs the static plan verifier
+    (``repro.analysis.verify_plan``, DESIGN.md §14) over the finished
+    plan — shape/dtype flow, quant invariants, sharding and streaming
+    legality, artifact coherence — raising ``PlanVerificationError``
+    with named violations. Verification is read-only: verified and
+    unverified compiles produce byte-identical plans.
     """
     if input_shape is None:
         input_shape = model.input_shape()
@@ -556,7 +574,11 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
     from repro.stream.passes import place_spatial_tiling
     with phase("place"):
         graph = place_spatial_tiling(graph, budget_bytes=stream_budget)
-    return ExecutionPlan(graph=graph, quant=quant_pol.quant,
+    plan = ExecutionPlan(graph=graph, quant=quant_pol.quant,
                          qformat=quant_pol.qformat, compile_policy=pol,
                          mesh=mesh,
                          autotune=autotune or quant_pol.autotune)
+    if verify:
+        from repro.analysis.verifier import verify_plan
+        verify_plan(plan)
+    return plan

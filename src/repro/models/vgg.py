@@ -142,7 +142,8 @@ class VGGStyleCNN:
     def compile(self, policy: ExecPolicy | None = None, *,
                 fuse: bool = True, batch: int = 1, mesh=None,
                 autotune: bool = False,
-                stream_budget: int | None = None) -> "ExecutionPlan":
+                stream_budget: int | None = None,
+                verify: bool = True) -> "ExecutionPlan":
         """Same contract as ``PaperCNN.compile`` (DESIGN.md §8–§10, §13):
         trace → block fusion → quant lowering → spatial-tiling placement.
         At the default 224×224 the early blocks exceed the streaming
@@ -150,7 +151,7 @@ class VGGStyleCNN:
         from repro.graph.plan import compile_model
         return compile_model(self, self.input_shape(batch), policy=policy,
                              fuse=fuse, mesh=mesh, autotune=autotune,
-                             stream_budget=stream_budget)
+                             stream_budget=stream_budget, verify=verify)
 
     def loss(self, params: dict, batch: dict, ctx=None
              ) -> tuple[jax.Array, dict]:

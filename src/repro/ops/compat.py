@@ -4,9 +4,9 @@ Before the registry, execution structure was threaded as string literals:
 ``Conv2DConfig(path="kernel", quant="int8")`` plus ``interpret=True``
 defaults inside each kernel wrapper. ``policy_from_legacy`` is the single
 place those spellings are still understood; everything else speaks
-``ExecPolicy``. New code must not add ``path=`` dispatch — the grep gate
-(``scripts/check_dispatch.py``) fails the build if it reappears outside
-this shim.
+``ExecPolicy``. New code must not add ``path=`` dispatch — the
+``string-dispatch`` lint rule (``python -m repro.analysis``, DESIGN.md
+§14) fails the build if it reappears outside this shim.
 """
 from __future__ import annotations
 

@@ -5,9 +5,10 @@ The front-end's whole job is time-sensitive scheduling — arrival
 timestamps, deadlines, hold-for-top-up decisions, latency percentiles —
 and none of that is testable against the wall clock: a test that sleeps
 is slow, and a test that races real time is flaky. So the serving layer
-never calls ``time.*`` directly (``scripts/check_dispatch.py`` greps it
-out of ``src/repro/serve/`` — this module is the one sanctioned
-exception). Everything takes an injectable ``Clock``:
+never calls ``time.*`` directly (the ``raw-clock`` lint rule of
+``python -m repro.analysis`` bans it — including aliased and
+from-imports — from ``src/repro/serve/``; this module is the one
+sanctioned exception). Everything takes an injectable ``Clock``:
 
 * ``MonotonicClock`` — production: ``time.monotonic`` / ``time.sleep``.
 * ``VirtualClock`` — tests and simulation: time is a number that moves

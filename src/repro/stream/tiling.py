@@ -42,7 +42,8 @@ from dataclasses import dataclass
 __all__ = ["SpatialTiling", "STREAM_VMEM_BUDGET_BYTES", "halo_rows",
            "band_input_rows", "streamed_input_rows", "conv_bands",
            "pooled_bands", "choose_tile_rows", "image_working_set",
-           "band_working_set", "tiling_to_doc", "tiling_from_doc"]
+           "band_working_set", "check_tiling", "tiling_to_doc",
+           "tiling_from_doc"]
 
 # Per-image activation budget (bytes) above which a conv/fused stage is
 # spatially tiled: input slab + full output for one image. This is the
@@ -165,6 +166,79 @@ def choose_tile_rows(n: int, h: int, w: int, m: int, kh: int, kw: int,
         else:
             break
     return best
+
+
+def check_tiling(tiling: "SpatialTiling", *, fused: bool,
+                 in_shape: tuple[int, int, int, int],
+                 w_shape: tuple[int, int, int, int],
+                 stride: tuple[int, int], itemsize: int
+                 ) -> list[tuple[str, str]]:
+    """Streaming-legality checks for one tiled stage, as (code, message)
+    pairs — the plan verifier's ``stream-*`` family lives here so the
+    band math and its invariants stay in one module.
+
+    Checks: halo accounting matches K/stride (``stream-halo``); the
+    pooled flag matches the stage family, so no 2×2 pool window can
+    straddle a band cut (``stream-pool-straddle``); a multi-row band's
+    working set fits the stamped budget — a single-row band is the
+    best-effort floor and is always legal (``stream-budget``); and the
+    re-derived band plan partitions the output rows exactly
+    (``stream-coverage``).
+    """
+    out: list[tuple[str, str]] = []
+    _, n, h, w = in_shape
+    m, _, kh, kw = w_shape
+    sh, sw = stride
+    ho = (h - kh) // sh + 1
+    wo = (w - kw) // sw + 1
+
+    want_halo = halo_rows(kh, sh)
+    if tiling.halo != want_halo:
+        out.append(("stream-halo",
+                    f"tiling {tiling} records halo={tiling.halo} but "
+                    f"kh={kh}, sh={sh} gives halo={want_halo} — bands "
+                    f"would drop or double-read input rows"))
+    if tiling.pooled != fused:
+        kind = "fused conv+pool" if fused else "plain conv"
+        why = ("odd conv rows, so 2x2 pool windows straddle bands"
+               if fused else "pooled rows the stage never produces")
+        out.append(("stream-pool-straddle",
+                    f"tiling {tiling} has pooled={tiling.pooled} on a "
+                    f"{kind} stage — band cuts land on {why}"))
+        return out  # band math below assumes the right row unit
+
+    try:
+        if fused:
+            po = max(ho // 2, 1)
+            bands = pooled_bands(po, tiling.tile_rows, kh, sh, h)
+            total = po
+        else:
+            bands = conv_bands(ho, tiling.tile_rows, kh, sh)
+            total = ho
+    except ValueError as e:
+        out.append(("stream-coverage", f"band plan invalid: {e}"))
+        return out
+    covered = 0
+    for lo, hi, _, _ in bands:
+        if lo != covered or hi <= lo:
+            out.append(("stream-coverage",
+                        f"band [{lo}, {hi}) does not continue the "
+                        f"partition at row {covered}"))
+            return out
+        covered = hi
+    if covered != total:
+        out.append(("stream-coverage",
+                    f"bands cover {covered} of {total} output rows"))
+
+    if tiling.tile_rows > 1:
+        ws = band_working_set(n, w, m, wo, tiling.tile_rows, kh, sh,
+                              itemsize, pooled=fused)
+        if ws > tiling.budget_bytes:
+            out.append(("stream-budget",
+                        f"band working set {ws} B exceeds the stamped "
+                        f"budget {tiling.budget_bytes} B "
+                        f"(tile_rows={tiling.tile_rows}; shrink the band)"))
+    return out
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,7 @@
+"""Known-bad fixture: the unfused conv->relu->pool layer chain."""
+
+
+def block(conv2d_apply, relu, maxpool2, x, w):
+    y = conv2d_apply(x, w)
+    y = relu(y)
+    return maxpool2(y)

@@ -1,0 +1,7 @@
+"""Known-bad fixture: pre-registry string/bool dispatch plumbing."""
+
+
+def run(conv2d_apply, kern, x, w):
+    y = conv2d_apply(x, w, path="im2col")
+    z = kern(x, interpret=True)
+    return y, z

@@ -1,0 +1,6 @@
+"""Known-bad fixture: hand-rolled shard_map over a conv dispatch."""
+
+
+def sharded(shard_map, conv2d_apply, mesh, x, w):
+    f = shard_map(lambda a, b: conv2d_apply(a, b), mesh=mesh)
+    return f(x, w)

@@ -1,0 +1,6 @@
+"""Known-bad fixture: full-frame conv dispatch at streaming scale."""
+
+
+def full_frame(conv2d, x, w):
+    big = x.reshape(1, 1, 224, 224)
+    return conv2d(big, w)

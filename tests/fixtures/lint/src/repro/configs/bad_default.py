@@ -1,0 +1,5 @@
+"""Known-bad fixture: mutable defaults aliasing across config instances."""
+
+
+def make_config(layers=[], opts={}):
+    return {"layers": layers, **opts}

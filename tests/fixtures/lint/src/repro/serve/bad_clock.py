@@ -1,0 +1,10 @@
+"""Known-bad fixture: every raw-clock form the serving layer bans,
+written in the aliased/from-import spellings the legacy regex missed."""
+import time as t
+from time import monotonic
+
+
+def latency():
+    start = monotonic()
+    t.sleep(0.01)
+    return t.monotonic() - start

@@ -1,0 +1,11 @@
+"""Exempt fixture: the one sanctioned Clock wrapper — raw time use here
+must produce zero findings (mirrors src/repro/serve/clock.py)."""
+import time
+
+
+def now() -> float:
+    return time.monotonic()
+
+
+def sleep(seconds: float) -> None:
+    time.sleep(seconds)

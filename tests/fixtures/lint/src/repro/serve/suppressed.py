@@ -1,0 +1,8 @@
+"""Suppression fixture: two raw-clock sites carry a per-line disable,
+one does not — exactly one finding must survive."""
+import time  # lint: disable=raw-clock
+
+
+def pause():
+    time.sleep(0.5)  # lint: disable=raw-clock
+    time.sleep(0.1)

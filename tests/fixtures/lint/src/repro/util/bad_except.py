@@ -1,0 +1,8 @@
+"""Known-bad fixture: a fallback ladder that swallows everything."""
+
+
+def swallow(thunk):
+    try:
+        return thunk()
+    except:
+        return None

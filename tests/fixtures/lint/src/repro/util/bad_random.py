@@ -1,0 +1,10 @@
+"""Known-bad fixture: unthreaded randomness in library code."""
+import jax
+import numpy as np
+
+
+def noisy(shape):
+    base = np.random.rand(*shape)
+    jit = jax.random.normal(jax.random.PRNGKey(0), shape)
+    seeded = np.random.RandomState(0).rand(*shape)  # sanctioned: seeded
+    return base + jit, seeded
