@@ -1,29 +1,49 @@
 """Channel-parallel plan sweep: GOPS × schedule × mesh size × quant mode.
 
 The paper's §III.A claim is that channel parallelism scales conv
-throughput with compute units; DESIGN.md §9 compiles that choice into the
-execution plan. This sweep measures it end to end: a shard-friendly CNN
-(channel counts divisible by every mesh size) is compiled per
+throughput with compute units; DESIGN.md §9/§15 compile that choice into
+the execution plan. This sweep measures it end to end: a shard-friendly
+CNN (channel counts divisible by every mesh size) is compiled per
 
   * **schedule** — ``none`` (data-parallel batch sharding only), ``icp``
-    (Eq. 7 forced), ``ocp`` (Eq. 6 forced),
-  * **mesh**     — 1, 2, 4 devices (``1×k`` data×model for icp/ocp,
-    ``k×1`` for the data-parallel column),
+    (Eq. 7 forced), ``ocp`` (Eq. 6 forced), ``auto`` (per-stage 2-D
+    ``icp × ocp`` split from the arithmetic-intensity cost model,
+    DESIGN.md §15),
+  * **mesh**     — 1, 2, 4 devices. The forced 1-D schedules pin the
+    shape (``1×k`` data×model for icp/ocp, ``k×1`` for the data-parallel
+    column); ``auto`` additionally chooses the **mesh factorization** —
+    every ``data × model`` split of the k devices is compiled and timed,
+    and the best cell wins (the tentpole's batch×channel axis: at k=4
+    that's ``4×1``, ``2×2``, ``1×4``, composing data parallelism with the
+    per-stage channel split),
   * **quant**    — the plan's three number formats,
 
 and timed at each batch size; GOPS = flops_per_image × batch / time.
-A ``BENCH_shard.json`` trajectory point records, per (schedule, mesh,
-quant), the reference-batch GOPS plus each sharded cell's speedup over
-the mesh=1 unsharded plan, so later PRs can track whether the collective
-schedules keep paying.
+
+**Baseline protocol** (the fix for the old per-placement drift): the
+unsharded, mesh-free plan is timed exactly once per (quant, batch),
+*before* any sharded cell, and every cell of that (quant, batch) —
+including the mesh=1 rows — divides by that single measurement. The
+baseline timings are recorded verbatim in the JSON point so a later run
+can tell a placement regression from a baseline shift. Per-stage
+arithmetic intensity (MACs per element moved) and the auto placement it
+produces are recorded alongside, so the benchmark explains its own
+placements.
 
 On CPU the sweep needs forced host devices: run standalone (the module
 sets ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` before jax
 initializes). Inside ``benchmarks/run.py`` (jax already initialized,
 usually 1 device) mesh sizes beyond the device count are skipped with a
 note. As everywhere in benchmarks/: on CPU the *shape* of the curve is
-the claim, not the microseconds — expect ICP/data wins at larger batches
-and OCP losses (its replicated window extraction dominates off-TPU).
+the claim, not the microseconds — expect ICP/data wins at larger batches,
+OCP losses (its replicated window extraction dominates off-TPU), and the
+``auto`` rows to track the best feasible schedule per mesh size.
+
+``--gate-monotonic`` turns the sweep into a CI check: the auto
+placement's reference-batch speedup must not *fall off* between mesh=2
+and mesh=4 (the regression this sweep exists to catch — ICP 2.42× →
+1.57× in the 1-D days). The gate is a ratio test with slack for the
+single-core CI box's timing noise, not an absolute-throughput assertion.
 """
 from __future__ import annotations
 
@@ -44,35 +64,55 @@ import numpy as np  # noqa: E402
 
 from benchmarks.common import emit  # noqa: E402
 from benchmarks.pipeline_sweep import _best_us  # noqa: E402
+from repro.graph import stage_arith_intensity  # noqa: E402
 from repro.models.cnn import PaperCNN, PaperCNNConfig  # noqa: E402
 from repro.ops import ExecPolicy  # noqa: E402
 
-SCHEDULES = ("none", "icp", "ocp")
+SCHEDULES = ("none", "icp", "ocp", "auto")
 MESHES = (1, 2, 4)
 QUANTS = ("none", "qformat", "int8")
 BATCHES = [8, 64]
 REFERENCE_BATCH = 64                    # where sharding should pay
 # shard-friendly paper-CNN scaling: every channel count divides 4
 SWEEP_CFG = dict(conv1_c=32, conv2_c=64)
+# mesh=4 must beat mesh=2 by at least this ratio; < 1.0 absorbs the
+# single-core CI box's timing noise while still catching a real falloff
+# (the 1-D ICP collapse measured 1.57/2.42 = 0.65)
+MONOTONIC_SLACK = 0.85
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_shard.json"
 
 
-def _mesh(schedule: str, k: int):
-    """icp/ocp shard channels over ``model``; the data-parallel column
-    shards the batch over ``data``. k=1 still builds the mesh so every
-    row runs the same (shard_map) code path."""
-    devs = np.asarray(jax.devices()[:k])
+def _mesh(data: int, model: int):
+    """A ``data × model`` mesh over the first data·model devices. Built
+    even at 1×1 so every row runs the same (shard_map) code path."""
+    devs = np.asarray(jax.devices()[: data * model])
+    return jax.sharding.Mesh(devs.reshape(data, model), ("data", "model"))
+
+
+def _shapes(schedule: str, k: int, batches) -> list[tuple[int, int]]:
+    """Candidate (data, model) factorizations of k devices. The forced
+    1-D schedules pin the shape; ``auto`` tries every factorization whose
+    data extent divides all swept batches and keeps the fastest."""
     if schedule == "none":
-        return jax.sharding.Mesh(devs.reshape(k, 1), ("data", "model"))
-    return jax.sharding.Mesh(devs.reshape(1, k), ("data", "model"))
+        return [(k, 1)]
+    if schedule != "auto":
+        return [(1, k)]
+    return [(d, k // d) for d in range(1, k + 1)
+            if k % d == 0 and all(b % d == 0 for b in batches)]
+
+
+_OVERRIDE = {"none": "none", "icp": "input", "ocp": "output", "auto": None}
 
 
 def sweep(schedules=SCHEDULES, meshes=MESHES, quants=QUANTS,
           batches=BATCHES, *, warmup=2, iters=8):
-    """-> rows [{schedule, mesh, quant, batch, us, gops, speedup}];
-    ``speedup`` is vs the mesh=1 unsharded bound plan of the same
-    (quant, batch)."""
+    """-> rows [{schedule, mesh, mesh_shape, quant, batch, us, gops,
+    speedup, baseline_us, placements}] — for ``auto`` the row is the
+    fastest (data, model) factorization of the k devices. ``speedup`` is
+    vs the single fixed unsharded (mesh-free) plan timing of the same
+    (quant, batch) — every cell, mesh=1 included, shares that
+    denominator."""
     key = jax.random.PRNGKey(0)
     cfg = PaperCNNConfig(name="shard_sweep_cnn", **SWEEP_CFG)
     flops1 = cfg.flops_per_image()
@@ -82,12 +122,16 @@ def sweep(schedules=SCHEDULES, meshes=MESHES, quants=QUANTS,
     rows = []
     for quant in quants:
         pol = ExecPolicy(quant=quant)
+        # the fixed baseline: one unsharded timing per (quant, batch),
+        # taken before any sharded cell of this quant
         base = model.compile(policy=pol).bind(params)
         base_fwd = jax.jit(lambda x, _b=base: _b(x))
         base_us = {}
         for b in batches:
             x = jax.random.normal(key, (b, 1, 28, 28))
             base_us[b] = _best_us(base_fwd, x, warmup=warmup, iters=iters)
+            emit(f"shard/{quant}/baseline/batch{b}", base_us[b],
+                 f"GOPS={flops1 * b / base_us[b] / 1e3:.2f};unsharded")
         for schedule in schedules:
             for k in meshes:
                 if k > ndev:
@@ -95,33 +139,75 @@ def sweep(schedules=SCHEDULES, meshes=MESHES, quants=QUANTS,
                          f"needs {k} devices, have {ndev} (run standalone "
                          f"for forced host devices)")
                     continue
-                plan = model.compile(
-                    policy=pol.with_options(channel_parallel={
-                        "none": "none", "icp": "input",
-                        "ocp": "output"}[schedule]),
-                    mesh=_mesh(schedule, k))
-                bound = plan.bind(params)
-                fwd = jax.jit(lambda x, _b=bound: _b(x))
+                best: dict[int, dict] = {}      # batch -> fastest cell
+                shapes = _shapes(schedule, k, batches)
+                for d, m in shapes:
+                    plan = model.compile(
+                        policy=pol.with_options(
+                            channel_parallel=_OVERRIDE[schedule]),
+                        mesh=_mesh(d, m))
+                    bound = plan.bind(params)
+                    fwd = jax.jit(lambda x, _b=bound: _b(x))
+                    placements = ",".join(
+                        p["placement"] or "-"
+                        for p in stage_arith_intensity(plan.graph))
+                    for b in batches:
+                        x = jax.random.normal(key, (b, 1, 28, 28))
+                        t = _best_us(fwd, x, warmup=warmup, iters=iters)
+                        cell = {
+                            "schedule": schedule, "mesh": k, "quant": quant,
+                            "mesh_shape": f"{d}x{m}", "batch": b, "us": t,
+                            "gops": flops1 * b / t / 1e3,
+                            "speedup": base_us[b] / t,
+                            "baseline_us": base_us[b],
+                            "placements": placements,
+                        }
+                        if len(shapes) > 1:
+                            emit(f"shard/{quant}/{schedule}/mesh{k}/"
+                                 f"{d}x{m}/batch{b}", t,
+                                 f"GOPS={cell['gops']:.2f};"
+                                 f"speedup_vs_unsharded="
+                                 f"{cell['speedup']:.2f}x;"
+                                 f"placed={placements}")
+                        if b not in best or t < best[b]["us"]:
+                            best[b] = cell
                 for b in batches:
-                    x = jax.random.normal(key, (b, 1, 28, 28))
-                    t = _best_us(fwd, x, warmup=warmup, iters=iters)
-                    row = {
-                        "schedule": schedule, "mesh": k, "quant": quant,
-                        "batch": b, "us": t,
-                        "gops": flops1 * b / t / 1e3,
-                        "speedup": base_us[b] / t,
-                    }
+                    row = best[b]
                     rows.append(row)
-                    emit(f"shard/{quant}/{schedule}/mesh{k}/batch{b}", t,
+                    emit(f"shard/{quant}/{schedule}/mesh{k}/batch{b}",
+                         row["us"],
                          f"GOPS={row['gops']:.2f};"
-                         f"speedup_vs_mesh1={row['speedup']:.2f}x;"
-                         f"sharded_stages={plan.num_sharded()}")
+                         f"speedup_vs_unsharded={row['speedup']:.2f}x;"
+                         f"mesh_shape={row['mesh_shape']};"
+                         f"placed={row['placements']}")
     return rows
 
 
+def _intensity_by_mesh(meshes) -> dict:
+    """Auto placement + per-stage arithmetic intensity per mesh
+    factorization (quant-independent: the cost model sees channels and
+    windows, not number formats)."""
+    model = PaperCNN(PaperCNNConfig(name="shard_sweep_cnn", **SWEEP_CFG))
+    out = {}
+    for k in meshes:
+        if k > len(jax.devices()):
+            continue
+        for d in range(1, k + 1):
+            if k % d:
+                continue
+            shape = f"{d}x{k // d}"
+            if shape in out:
+                continue
+            plan = model.compile(policy=ExecPolicy(), mesh=_mesh(d, k // d))
+            out[shape] = stage_arith_intensity(plan.graph)
+    return out
+
+
 def trajectory_point(rows, path=BENCH_JSON) -> dict:
-    """Append one point per run: reference-batch GOPS per cell plus the
-    headline — the best sharded speedup over the unsharded plan."""
+    """Append one point per run: reference-batch GOPS per cell, the fixed
+    baseline timings, per-stage arithmetic intensity + auto placement,
+    plus the headline — the best sharded speedup over the unsharded
+    plan."""
     ref = [r for r in rows if r["batch"] == REFERENCE_BATCH] or rows
     sharded = [r for r in rows if r["mesh"] > 1 and r["schedule"] != "none"]
     best = max(sharded, key=lambda r: r["speedup"], default=None)
@@ -130,15 +216,22 @@ def trajectory_point(rows, path=BENCH_JSON) -> dict:
         "reference_batch": ref[0]["batch"],
         "platform": jax.default_backend(),
         "devices": len(jax.devices()),
+        "baseline_us": {
+            f"{r['quant']}/batch{r['batch']}": round(r["baseline_us"], 1)
+            for r in rows},
         "cells": {
             f"{r['quant']}/{r['schedule']}/mesh{r['mesh']}": {
                 "gops": round(r["gops"], 3),
-                "speedup_vs_mesh1": round(r["speedup"], 3)}
+                "speedup_vs_unsharded": round(r["speedup"], 3),
+                "mesh_shape": r["mesh_shape"],
+                "placements": r["placements"]}
             for r in ref},
+        "stage_arith_intensity": _intensity_by_mesh(
+            sorted({r["mesh"] for r in rows})),
         "best_sharded": None if best is None else {
             "cell": f"{best['quant']}/{best['schedule']}/"
                     f"mesh{best['mesh']}/batch{best['batch']}",
-            "speedup_vs_mesh1": round(best["speedup"], 3)},
+            "speedup_vs_unsharded": round(best["speedup"], 3)},
     }
     history = []
     if path.exists():
@@ -151,6 +244,25 @@ def trajectory_point(rows, path=BENCH_JSON) -> dict:
     return point
 
 
+def gate_monotonic(rows, *, slack=MONOTONIC_SLACK) -> list[str]:
+    """-> failure messages (empty = pass). For every (quant, batch) with
+    auto rows at both mesh=2 and mesh=4: speedup(4) >= slack *
+    speedup(2). Catches the mesh-4 falloff without asserting absolute
+    throughput on a noisy box."""
+    auto = {(r["quant"], r["batch"], r["mesh"]): r["speedup"]
+            for r in rows if r["schedule"] == "auto"}
+    fails = []
+    for (quant, batch, mesh), s2 in sorted(auto.items()):
+        if mesh != 2 or (quant, batch, 4) not in auto:
+            continue
+        s4 = auto[(quant, batch, 4)]
+        if s4 < slack * s2:
+            fails.append(
+                f"auto/{quant}/batch{batch}: mesh4 speedup {s4:.3f} < "
+                f"{slack} * mesh2 speedup {s2:.3f} — mesh-4 falloff")
+    return fails
+
+
 def run() -> None:
     rows = sweep()
     trajectory_point(rows)
@@ -159,15 +271,27 @@ def run() -> None:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sweep for CI: mesh<=2, quant none, 1 batch")
+                    help="tiny sweep for CI: auto schedule only, quant "
+                         "none, 1 batch, mesh 1/2/4")
     ap.add_argument("--no-json", action="store_true",
                     help="skip the BENCH_shard.json trajectory write")
+    ap.add_argument("--gate-monotonic", action="store_true",
+                    help="fail (exit 1) if the auto placement's speedup "
+                         "falls off between mesh=2 and mesh=4")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:
-        rows = sweep(meshes=(1, 2), quants=("none",), batches=[8],
-                     warmup=1, iters=3)
+        rows = sweep(schedules=("auto",), meshes=(1, 2, 4),
+                     quants=("none",), batches=[8], warmup=1, iters=4)
     else:
         rows = sweep()
     if not args.no_json:
         trajectory_point(rows)
+    if args.gate_monotonic:
+        fails = gate_monotonic(rows)
+        for f in fails:
+            print(f"GATE FAIL: {f}", file=sys.stderr)
+        if fails:
+            sys.exit(1)
+        print("monotonicity gate: auto mesh4 >= mesh2 (with "
+              f"{MONOTONIC_SLACK} slack) OK")

@@ -153,9 +153,12 @@ echo "== plan_boot smoke (cold-boot bench: modes bitwise-equal, schema gate) =="
 PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.plan_boot \
   --smoke --no-json
 
-echo "== shard_sweep smoke (channel-parallel plans, 2 forced devices) =="
-XLA_FLAGS="--xla_force_host_platform_device_count=2" \
-  PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.shard_sweep --smoke --no-json
+echo "== shard_sweep smoke (auto 2-D placement, 4 forced devices, monotonicity gate) =="
+# the gate asserts the auto placement does not fall off between mesh=2
+# and mesh=4 (ratio test with slack — see benchmarks/shard_sweep.py)
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+  PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.shard_sweep \
+  --smoke --no-json --gate-monotonic
 
 echo "== tier-1 tests =="
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

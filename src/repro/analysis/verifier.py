@@ -14,7 +14,8 @@ Invariant families (each a stable ``Violation.code`` prefix):
   * ``quant-*`` — the lowered graph matches the plan's baked quant mode:
     no fp weight reaches an int8 stage, QTensor scale shapes match
     out-channels, QFormat bits agree (paper C4);
-  * ``shard-*`` — ICP/OCP divisibility against the mesh (Eq. 6/7), data
+  * ``shard-*`` — ICP/OCP/2-D divisibility against the mesh (Eq. 6/7,
+    icp × ocp factorization of the model axis, gather-axis purity), data
     axis presence, flatten-gather placement at the conv→fc boundary;
   * ``stream-*`` — band cuts never straddle a 2×2 pool window, per-band
     working set fits the budget, halo accounting matches K/stride
@@ -309,7 +310,21 @@ def _check_sharding(plan, out: list[Violation]) -> None:
     sharded: set[int] = set()
     for node in graph:
         spec = getattr(node, "sharding", None)
-        if spec is None or spec.mode == "none":
+        if spec is None:
+            continue
+        if spec.mode == "none":
+            # a pure-data stage must not carry model-axis factors: the
+            # executor would run it replicated while the spec claims a
+            # collective — the fingerprint and the program would disagree
+            if spec.icp > 1 or spec.ocp > 1:
+                out.append(Violation(
+                    code="shard-pure-data-collective", node=node.id,
+                    message=f"pure data-parallel stage (mode=none) carries "
+                            f"model-axis factors icp={spec.icp} "
+                            f"ocp={spec.ocp} — no collective runs on this "
+                            f"stage",
+                    hint="clear the factors or set mode to the split "
+                         "they describe"))
             continue
         sharded.add(node.id)
         if mesh is None:
@@ -326,15 +341,43 @@ def _check_sharding(plan, out: list[Violation]) -> None:
             continue
         msize = mesh.shape["model"]
         m, n = node.w.shape[0], node.w.shape[1]
-        dim, name, eq = (m, "M (out channels)", "Eq. 6/OCP") \
-            if spec.mode == "output" else (n, "N (in channels)", "Eq. 7/ICP")
-        if dim % msize != 0:
+        ki, ko = spec.split(msize)
+        if (spec.icp or spec.ocp) and ki * ko != msize:
             out.append(Violation(
-                code="shard-divisibility", node=node.id,
-                message=f"{eq}: {name}={dim} does not divide the model "
-                        f"axis ({msize} devices)",
-                hint="use divisible channel counts or let auto-placement "
-                     "pick the schedule"))
+                code="shard-factorization", node=node.id,
+                message=f"{spec} factors do not cover the model axis: "
+                        f"icp={ki} x ocp={ko} = {ki * ko} != {msize} "
+                        f"devices",
+                hint="icp * ocp must equal the model-axis extent"))
+        if spec.mode == "both":
+            # both-axis divisibility: each factor against its channel dim
+            if n % ki != 0:
+                out.append(Violation(
+                    code="shard-divisibility", node=node.id,
+                    message=f"Eq. 7/ICP side of {spec}: N (in channels)="
+                            f"{n} does not divide the icp factor "
+                            f"({ki} groups)",
+                    hint="use divisible channel counts or let "
+                         "auto-placement pick the split"))
+            if m % ko != 0:
+                out.append(Violation(
+                    code="shard-divisibility", node=node.id,
+                    message=f"Eq. 6/OCP side of {spec}: M (out channels)="
+                            f"{m} does not divide the ocp factor "
+                            f"({ko} groups)",
+                    hint="use divisible channel counts or let "
+                         "auto-placement pick the split"))
+        else:
+            dim, name, eq = (m, "M (out channels)", "Eq. 6/OCP") \
+                if spec.mode == "output" \
+                else (n, "N (in channels)", "Eq. 7/ICP")
+            if dim % msize != 0:
+                out.append(Violation(
+                    code="shard-divisibility", node=node.id,
+                    message=f"{eq}: {name}={dim} does not divide the model "
+                            f"axis ({msize} devices)",
+                    hint="use divisible channel counts or let "
+                         "auto-placement pick the schedule"))
         if spec.data and "data" not in axis_names:
             out.append(Violation(
                 code="shard-mesh", node=node.id,
@@ -370,6 +413,39 @@ def _check_sharding(plan, out: list[Violation]) -> None:
                     message=f"dense stage reads channel-sharded %{nid} "
                             f"with no flatten gather between them",
                     hint="the conv->fc boundary gathers at FlattenNode"))
+                break
+            frontier.extend(src.inputs)
+
+    # gather-axis purity: the flatten gather moves ONLY the model axis —
+    # the batch dim keeps its data sharding through it (DESIGN.md §15).
+    # A model-sharded stage that opted OUT of data sharding feeding a
+    # flatten on a mesh WITH a data axis would force the gather to
+    # reshard the batch axis too, so it is rejected statically.
+    if "data" not in axis_names:
+        return
+    for node in graph:
+        if not isinstance(node, FlattenNode):
+            continue
+        frontier = list(node.inputs)
+        seen = set()
+        while frontier:
+            nid = frontier.pop()
+            if nid in seen:
+                continue
+            seen.add(nid)
+            src = graph.node(nid)
+            if isinstance(src, FlattenNode):
+                continue
+            spec = getattr(src, "sharding", None)
+            if nid in sharded and spec is not None and not spec.data:
+                out.append(Violation(
+                    code="shard-gather-axis", node=node.id,
+                    message=f"flatten gathers %{nid} ({spec}, data=False) "
+                            f"on a mesh with a 'data' axis — the gather "
+                            f"would move the batch axis, not just the "
+                            f"model axis",
+                    hint="place the stage with data=True or drop the "
+                         "mesh's data axis"))
                 break
             frontier.extend(src.inputs)
 

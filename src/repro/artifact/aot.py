@@ -41,12 +41,16 @@ def _platform() -> str:
     return jax.default_backend()
 
 
-def aot_compile(fn, input_shape, dtype="float32"):
+def aot_compile(fn, input_shape, dtype="float32", sharding=None):
     """Lower + compile ``fn`` for one static input shape — the jit work
     the serving warm call used to do implicitly, made explicit so it can
-    happen at artifact-save time (and be timed as its own boot phase)."""
+    happen at artifact-save time (and be timed as its own boot phase).
+    ``sharding`` (a NamedSharding) stamps the input layout into the
+    lowered program, so executables for data-sharded serving batches
+    (DESIGN.md §15) accept the batches the engine actually places."""
     import jax.numpy as jnp
-    spec = jax.ShapeDtypeStruct(tuple(input_shape), jnp.dtype(dtype))
+    spec = jax.ShapeDtypeStruct(tuple(input_shape), jnp.dtype(dtype),
+                                sharding=sharding)
     return jax.jit(fn).lower(spec).compile()
 
 

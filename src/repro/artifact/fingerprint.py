@@ -47,7 +47,9 @@ SCHEMA_VERSION = 1
 # version of the *semantics* a plan encodes (executor calling
 # conventions, pass meanings). Part of the fingerprint so a plan written
 # by an incompatible build never matches.
-REPRO_PLAN_VERSION = 1
+# v2: 2-D (icp x ocp) placement + ring-reduce collectives + data-axis
+# batch scatter (DESIGN.md §15) changed the sharded executor's program.
+REPRO_PLAN_VERSION = 2
 
 
 def params_digest(params) -> str:

@@ -60,13 +60,17 @@ def _ref_from(doc: dict | None) -> ParamRef | None:
 def _shard_doc(spec: ShardingSpec | None) -> dict | None:
     if spec is None:
         return None
-    return {"mode": spec.mode, "data": bool(spec.data)}
+    return {"mode": spec.mode, "data": bool(spec.data),
+            "icp": int(spec.icp), "ocp": int(spec.ocp)}
 
 
 def _shard_from(doc: dict | None) -> ShardingSpec | None:
     if doc is None:
         return None
-    return ShardingSpec(mode=doc["mode"], data=bool(doc["data"]))
+    # icp/ocp absent in pre-§15 artifacts: 0 = derive from mode
+    return ShardingSpec(mode=doc["mode"], data=bool(doc["data"]),
+                        icp=int(doc.get("icp", 0)),
+                        ocp=int(doc.get("ocp", 0)))
 
 
 def _node_doc(node) -> dict:

@@ -194,6 +194,22 @@ def _export_stage_rows(bound) -> list[dict]:
     return rows
 
 
+def _batch_sharding(plan, input_shape):
+    """The data-axis input placement AOT programs are lowered with
+    (DESIGN.md §15): batches split over ``data`` when the plan's mesh has
+    that axis and the static batch divides it, else None (replicated —
+    the pre-2-D behavior). Must agree with ``ExecutionPlan._scatter`` so
+    a restored executable accepts the batches the engine places."""
+    mesh = getattr(plan, "mesh", None)
+    if mesh is None or "data" not in mesh.axis_names:
+        return None
+    if not input_shape or input_shape[0] % mesh.shape["data"]:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(
+        mesh, P("data", *[None] * (len(input_shape) - 1)))
+
+
 # ---------------------------------------------------------------------------
 # save
 
@@ -220,7 +236,8 @@ def save_plan(bound, path, *, input_shapes=None, aot: bool = True) -> str:
     aot_blobs: list[bytes] = []
     if aot:
         for shape in input_shapes:
-            compiled = aot_compile(lambda x: bound(x), shape)
+            compiled = aot_compile(lambda x: bound(x), shape,
+                                   sharding=_batch_sharding(plan, shape))
             blob = serialize_compiled(compiled)
             if blob is None:        # backend can't serialize: IR-only
                 aot_index.clear()
@@ -326,7 +343,9 @@ class PlanArtifact:
             return exe
         bound = self.bound
         with warmup.phase("compile"):
-            compiled = aot_compile(lambda x: bound(x), input_shape, dtype)
+            compiled = aot_compile(
+                lambda x: bound(x), input_shape, dtype,
+                sharding=_batch_sharding(bound.plan, input_shape))
         cache_executable(
             executable_key(self.fingerprint, input_shape, dtype), compiled)
         return compiled

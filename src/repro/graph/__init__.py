@@ -24,7 +24,8 @@ from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
 from repro.graph.trace import GraphBuilder, TracedArray, param_refs, trace
 from repro.graph.passes import (default_passes, eliminate_dead_quantize,
                                 fuse_conv_blocks, lower_quant,
-                                place_channel_parallel)
+                                place_channel_parallel,
+                                stage_arith_intensity)
 from repro.graph.plan import BoundPlan, ExecutionPlan, compile_model
 
 __all__ = [
@@ -33,6 +34,6 @@ __all__ = [
     "QuantizeNode", "FusedConvBlockNode", "Graph",
     "GraphBuilder", "TracedArray", "param_refs", "trace",
     "default_passes", "eliminate_dead_quantize", "fuse_conv_blocks",
-    "lower_quant", "place_channel_parallel",
+    "lower_quant", "place_channel_parallel", "stage_arith_intensity",
     "BoundPlan", "ExecutionPlan", "compile_model",
 ]

@@ -67,7 +67,7 @@ class ParamRef:
 
 @dataclass(frozen=True)
 class ShardingSpec:
-    """Placement of one conv stage on a device mesh (DESIGN.md §9).
+    """Placement of one conv stage on a 2-D device mesh (DESIGN.md §9/§15).
 
     ``mode`` is the paper's §III.A channel-parallelism choice, in
     ``ChannelParallelism`` value spelling:
@@ -75,26 +75,57 @@ class ShardingSpec:
       * ``"output"`` — Eq. 6 / OCP: weights (and bias/requant scale)
         sharded on M over the ``model`` axis, no collective;
       * ``"input"``  — Eq. 7 / ICP: input channels sharded on N, one
-        psum combines the per-device partial accumulations;
+        ring reduce combines the per-device partial accumulations;
+      * ``"both"``   — the paper's composed §III.A design point: the
+        ``model`` axis factors into an ``icp × ocp`` sub-grid, each
+        device owning an (N/icp, M/ocp) weight block — the reduce runs
+        over the (smaller) icp groups only;
       * ``"none"``   — replicated compute (data parallelism only).
 
+    ``icp``/``ocp`` are the model-axis factors backing that choice
+    (``icp * ocp`` must equal the model-axis extent). ``0`` means
+    "derive from mode" — the pre-2-D encoding, where ``input`` meant
+    the whole axis is ICP and ``output`` the whole axis is OCP; the
+    placement pass always writes them explicitly now. Use ``split()``
+    to resolve either form against a mesh.
+
     ``data`` opts the stage's batch dim into sharding over the ``data``
-    axis (composes orthogonally with either channel mode). Set by the
+    axis (composes orthogonally with every channel mode). Set by the
     ``place_channel_parallel`` pass; ``None`` on a node means the graph
     was never placed and the stage executes single-device.
     """
 
     mode: str = "none"
     data: bool = True
+    icp: int = 0
+    ocp: int = 0
 
     def __post_init__(self):
-        if self.mode not in ("none", "input", "output"):
+        if self.mode not in ("none", "input", "output", "both"):
             raise ValueError(f"unknown sharding mode {self.mode!r}; "
-                             "expected none|input|output")
+                             "expected none|input|output|both")
+        if self.icp < 0 or self.ocp < 0:
+            raise ValueError(f"negative sharding factors "
+                             f"icp={self.icp} ocp={self.ocp}")
+
+    def split(self, model_size: int) -> tuple[int, int]:
+        """Resolve the (icp, ocp) group sizes against a mesh's model-axis
+        extent. Explicit factors win; legacy 1-D specs (factors unset)
+        derive the whole axis from ``mode``."""
+        if self.icp or self.ocp:
+            return (max(self.icp, 1), max(self.ocp, 1))
+        if self.mode == "input":
+            return (model_size, 1)
+        if self.mode == "output":
+            return (1, model_size)
+        return (1, 1)
 
     def __str__(self) -> str:
-        return {"input": "icp", "output": "ocp"}[self.mode] \
-            if self.mode != "none" else "none"
+        if self.mode == "none":
+            return "none"
+        if self.mode == "both":
+            return f"icp{self.icp}xocp{self.ocp}"
+        return {"input": "icp", "output": "ocp"}[self.mode]
 
 
 @dataclass(frozen=True)

@@ -25,10 +25,12 @@ deep pipeline (DESIGN.md §8):
      is dead and is removed. This is why the fused pipeline quantizes once
      per block instead of twice per layer boundary.
 
-  4. ``place_channel_parallel`` (mesh compiles only, DESIGN.md §9) —
+  4. ``place_channel_parallel`` (mesh compiles only, DESIGN.md §9/§15) —
      stamps the paper's §III.A parallelism choice on every conv stage as
-     a ``ShardingSpec``: OCP (Eq. 6) when M ≥ N·mesh, ICP (Eq. 7)
-     otherwise, divisibility-aware, overridable through
+     a ``ShardingSpec``: the model axis factors per stage into an
+     ``icp × ocp`` split chosen by an arithmetic-intensity cost model
+     (``_split_cost``) — pure OCP (Eq. 6), pure ICP (Eq. 7), a composed
+     2-D split, or replicated when nothing divides — overridable through
      ``ExecPolicy.channel_parallel``.
 
 Every pass is ``Graph -> Graph`` and re-validates; numerics after the full
@@ -46,7 +48,7 @@ from repro.graph.ir import (Conv2DNode, DenseNode, FlattenNode,
 
 __all__ = ["fuse_conv_blocks", "lower_quant", "eliminate_dead_quantize",
            "place_channel_parallel", "default_passes", "tunable_stages",
-           "stage_input_spec"]
+           "stage_input_spec", "stage_arith_intensity"]
 
 
 def _single_consumer(graph: Graph, nid: int) -> Node | None:
@@ -179,23 +181,102 @@ def eliminate_dead_quantize(graph: Graph) -> Graph:
     return graph.validate()
 
 
-def _pick_mode(m: int, n: int, model_size: int) -> str:
-    """The paper-§III.A placement rule, made divisibility-aware.
+# Modeled fixed cost of one ppermute ring hop (collective launch + sync),
+# expressed in element-traffic units so it adds directly to the byte terms
+# of ``_split_cost``. It is what makes the model prefer a short ring over
+# a long one when the per-hop payload is small — the measured mesh-4 ICP
+# falloff of BENCH_shard.json, as a constant.
+_HOP_OVERHEAD = 4096.0
 
-    Prefer OCP (Eq. 6, no collective) when the output channels are wide
-    enough to keep every device busy — M ≥ N·mesh — otherwise ICP (Eq. 7,
-    one psum) exploits the input-channel width. A schedule whose sharded
-    dim does not divide the mesh falls through to the other; if neither
-    divides, the stage stays replicated ("none") — auto-placement never
-    produces an invalid plan.
+
+def _split_cost(m: int, n: int, kh: int, kw: int, ho: int, wo: int,
+                ki: int, ko: int) -> float:
+    """Per-device cost model of an (icp=ki, ocp=ko) channel split —
+    the stage's arithmetic intensity turned into a placement score.
+
+    Terms (element units, per device):
+
+      * compute — (M/ko)·(N/ki)·Kh·Kw·Ho·Wo MACs; both factors shrink it.
+      * window  — the im2col/window stream each device reads:
+        (N/ki)·Kh·Kw·Ho·Wo. Only the ICP factor shrinks it — under OCP
+        every device streams the *full* input (Eq. 6 replicates x).
+      * reduce  — the ICP ring: ki−1 hops, each moving the whole
+        (M/ko)·Ho·Wo partial buffer, plus a fixed per-hop overhead.
+        Only exists when ki > 1; shrinks as ko grows — the 2-D win.
+
+    Low-arithmetic-intensity stages (small M, big windows) land on ICP;
+    wide-M stages on OCP; in between, a mixed split keeps the ring short
+    while still dividing the window stream.
     """
-    prefer = ("output", "input") if m >= n * model_size else \
-        ("input", "output")
-    for mode in prefer:
-        dim = m if mode == "output" else n
-        if dim % model_size == 0:
-            return mode
+    spatial = ho * wo
+    compute = (m / ko) * (n / ki) * kh * kw * spatial
+    window = (n / ki) * kh * kw * spatial
+    reduce_ = (ki - 1) * ((m / ko) * spatial + _HOP_OVERHEAD)
+    return compute + window + reduce_
+
+
+def _pick_split(m: int, n: int, kh: int, kw: int, ho: int, wo: int,
+                model_size: int) -> tuple[int, int]:
+    """Choose the (icp, ocp) factorization of the model axis for one
+    stage: the feasible (ki | N, ko | M, ki·ko = mesh) split of minimum
+    modeled cost. ``(1, 1)`` — pure data parallelism — is always
+    feasible, so auto-placement never produces an invalid plan; it only
+    wins when no divisible split is cheaper than staying replicated.
+    """
+    best, best_cost = (1, 1), _split_cost(m, n, kh, kw, ho, wo, 1, 1)
+    for ki in range(1, model_size + 1):
+        if model_size % ki:
+            continue
+        ko = model_size // ki
+        if n % ki or m % ko:
+            continue
+        cost = _split_cost(m, n, kh, kw, ho, wo, ki, ko)
+        if cost < best_cost:
+            best, best_cost = (ki, ko), cost
+    return best
+
+
+def _split_mode(ki: int, ko: int) -> str:
+    if ki > 1 and ko > 1:
+        return "both"
+    if ki > 1:
+        return "input"
+    if ko > 1:
+        return "output"
     return "none"
+
+
+def _conv_hw(graph: Graph, node: Node) -> tuple[int, int]:
+    """The stage's PRE-pool conv output spatial extent (the reduce buffer
+    size — a fused block's ``out`` is already pooled)."""
+    h, w = stage_input_spec(graph, node).shape[2:]
+    kh, kw = node.w.shape[2], node.w.shape[3]
+    sh, sw = node.stride
+    return (h - kh) // sh + 1, (w - kw) // sw + 1
+
+
+def stage_arith_intensity(graph: Graph) -> list[dict]:
+    """Per-conv-stage arithmetic intensity (MACs per element moved) and
+    the placement the cost model derives from it — recorded into
+    shard_sweep's JSON so the benchmark explains its own placements."""
+    out = []
+    for node in graph:
+        if not isinstance(node, (Conv2DNode, FusedConvBlockNode)):
+            continue
+        m, n = node.w.shape[0], node.w.shape[1]
+        kh, kw = node.w.shape[2], node.w.shape[3]
+        ho, wo = _conv_hw(graph, node)
+        macs = m * n * kh * kw * ho * wo
+        moved = n * ho * wo * kh * kw + m * n * kh * kw + m * ho * wo
+        spec = getattr(node, "sharding", None)
+        out.append({
+            "node": node.id, "op": node.op,
+            "m": m, "n": n, "k": [kh, kw], "conv_hw": [ho, wo],
+            "macs": macs, "elements_moved": moved,
+            "intensity": round(macs / moved, 3),
+            "placement": None if spec is None else str(spec),
+        })
+    return out
 
 
 def place_channel_parallel(graph: Graph, model_size: int, *,
@@ -203,8 +284,12 @@ def place_channel_parallel(graph: Graph, model_size: int, *,
                            data: bool = True) -> Graph:
     """Attach a ``ShardingSpec`` to every conv / fused-conv stage.
 
-    ``model_size`` is the mesh's ``model``-axis extent. ``override``
-    (ExecPolicy.channel_parallel: "input" | "output" | "none") forces one
+    ``model_size`` is the mesh's ``model``-axis extent. Auto placement
+    factors that axis per stage into an ``icp × ocp`` split chosen by the
+    ``_split_cost`` arithmetic-intensity model (DESIGN.md §15) — pure
+    ICP, pure OCP, a genuine 2-D split, or pure data parallelism when no
+    channel dim divides. ``override`` (ExecPolicy.channel_parallel:
+    "input" | "output" | "none") forces the whole axis onto one 1-D
     schedule; a stage whose channels the forced schedule cannot shard
     (e.g. ICP on a 1-channel input layer) stays **replicated** — never
     silently the other schedule — with the decision visible in
@@ -224,14 +309,21 @@ def place_channel_parallel(graph: Graph, model_size: int, *,
         conv_stages += 1
         m, n = node.w.shape[0], node.w.shape[1]
         if override is None:
-            mode = _pick_mode(m, n, model_size)
+            ho, wo = _conv_hw(graph, node)
+            ki, ko = _pick_split(m, n, node.w.shape[2], node.w.shape[3],
+                                 ho, wo, model_size)
+            mode = _split_mode(ki, ko)
         else:
             dim = m if override == "output" else n
             mode = override if (override == "none"
                                 or dim % model_size == 0) else "none"
             forced_hits += mode == override != "none"
-        placed.append(replace(node, sharding=ShardingSpec(mode=mode,
-                                                          data=data)))
+            ki, ko = ((model_size, 1) if mode == "input" else
+                      (1, model_size) if mode == "output" else (1, 1))
+        placed.append(replace(node, sharding=ShardingSpec(
+            mode=mode, data=data,
+            icp=ki if mode != "none" else 0,
+            ocp=ko if mode != "none" else 0)))
     if override not in (None, "none") and conv_stages and not forced_hits:
         raise ValueError(
             f"channel_parallel={override!r} applies to none of the "

@@ -29,14 +29,17 @@ winning tile parameters into the BoundPlan as per-stage ``ExecPolicy``
 tiling overrides, so the serve hot path never re-tunes and never even
 consults the cache.
 
-Compiling with ``mesh=`` makes the plan **sharded** (DESIGN.md §9): the
-placement pass stamps a ``ShardingSpec`` on every conv stage (ICP vs OCP
-per layer, paper §III.A), execution routes those stages through the
-explicit-collective schedules in ``core.parallelism``, and ``bind``
-additionally ``device_put``s every stage's weight operands under their
-placement — OCP weights land M-sharded, ICP weights N-sharded — so the
-per-batch call starts from resident shards, the way a bitstream's weight
-ROMs are flashed per compute unit before traffic arrives.
+Compiling with ``mesh=`` makes the plan **sharded** (DESIGN.md §9/§15):
+the placement pass stamps a ``ShardingSpec`` on every conv stage (the
+paper-§III.A icp × ocp split per layer, from an arithmetic-intensity
+cost model), execution routes those stages through the
+explicit-collective schedules in ``core.parallelism``, batches scatter
+over the ``data`` axis on entry, and ``bind`` additionally
+``device_put``s every stage's weight operands under their placement —
+OCP weights land M-sharded, ICP weights N-sharded, composed splits
+blocked over both — so the per-batch call starts from resident shards,
+the way a bitstream's weight ROMs are flashed per compute unit before
+traffic arrives.
 """
 from __future__ import annotations
 
@@ -170,20 +173,21 @@ class ExecutionPlan:
             from repro.ops.impls import split_requant
             x_arr, w_arr, scale = split_requant(xin, wv)
             mode = ChannelParallelism(spec.mode)
+            ki, ko = spec.split(self.mesh.shape["model"])
             daxis = "data" if spec.data else None
             if fused:
                 return fused_conv_block_channel_parallel(
                     x_arr, w_arr, bv, mesh=self.mesh, mode=mode,
                     stride=node.stride, odd=node.odd, scale=scale,
-                    data_axis=daxis, policy=base)
+                    data_axis=daxis, icp=ki, ocp=ko, policy=base)
             return conv2d_channel_parallel(
                 x_arr, w_arr, bv, mesh=self.mesh, mode=mode,
                 stride=node.stride, scale=scale, data_axis=daxis,
-                policy=base)
+                icp=ki, ocp=ko, policy=base)
 
         for node in self.graph:
             if isinstance(node, InputNode):
-                env[node.id] = x
+                env[node.id] = self._scatter(x)
             elif isinstance(node, QuantizeNode):
                 if node.id in folded:
                     env[node.id] = folded[node.id]
@@ -223,13 +227,33 @@ class ExecutionPlan:
                 raise TypeError(f"no executor for node {node.pretty()}")
         return env[self.graph.output_id]
 
+    def _scatter(self, x):
+        """Place the serving batch along the ``data`` axis on entry
+        (DESIGN.md §15): the front-end's bucketed batches split across
+        the data dimension of the mesh before the first stage runs, so
+        data-parallel replicas work on disjoint batch slices instead of
+        every device repeating the full batch. Batches that don't divide
+        the axis stay as-is (the schedules replicate them, exactly as
+        before)."""
+        if self.mesh is None or "data" not in self.mesh.axis_names:
+            return x
+        if x.ndim < 1 or x.shape[0] % self.mesh.shape["data"]:
+            return x
+        sh = NamedSharding(self.mesh, P("data", *[None] * (x.ndim - 1)))
+        if isinstance(x, jax.core.Tracer):
+            return jax.lax.with_sharding_constraint(x, sh)
+        return jax.device_put(x, sh)
+
     def _gather(self, v):
         """Collect a (possibly channel-sharded) activation at the conv→fc
-        boundary: replicated over ``model``, batch kept on ``data``. This
-        is the paper's accelerator DMA-ing the final feature map out of
-        the conv pipeline — and it pins the dense tail to the exact same
-        (replicated) program the unsharded plan runs, so a sharded plan
-        stays bitwise-comparable end to end."""
+        boundary: an axis-aware all-gather that moves ONLY the model
+        (channel) axis — the batch dim *keeps* its ``data`` sharding, so
+        the gather's per-device traffic is the model-axis shards of the
+        local batch slice, never the whole batch. This is the paper's
+        accelerator DMA-ing the final feature map out of the conv
+        pipeline — and it pins the dense tail to the exact same program
+        the unsharded plan runs (replicated over model), so a sharded
+        plan stays bitwise-comparable end to end."""
         if self.mesh is None:
             return v
         batch = "data" if "data" in self.mesh.axis_names else None
@@ -250,16 +274,26 @@ class ExecutionPlan:
         spec = node.sharding
         if spec is None or spec.mode == "none":
             return
-        ocp = spec.mode == "output"
-        wspec = P("model", None, None, None) if ocp \
-            else P(None, "model", None, None)
-        vspec = P("model") if ocp else P(None)
+        if spec.mode == "both":
+            # composed split: weights block over the (ocp, icp) sub-grid
+            # of the stage mesh; bias/scale shard with their M over ocp
+            from repro.core.parallelism import stage_mesh
+            ki, ko = spec.split(self.mesh.shape["model"])
+            mesh = stage_mesh(self.mesh, ki, ko, "model")
+            wspec = P("ocp", "icp", None, None)
+            vspec = P("ocp")
+        else:
+            mesh = self.mesh
+            ocp = spec.mode == "output"
+            wspec = P("model", None, None, None) if ocp \
+                else P(None, "model", None, None)
+            vspec = P("model") if ocp else P(None)
 
         def put(val, part):
-            sh = NamedSharding(self.mesh, part)
+            sh = NamedSharding(mesh, part)
             if isinstance(val, QTensor):      # int8: codes + per-M scales
                 return jax.device_put(val, QTensor(
-                    sh, NamedSharding(self.mesh, vspec)))
+                    sh, NamedSharding(mesh, vspec)))
             return jax.device_put(val, sh)
 
         if len(node.inputs) > 1:              # quantize-lowered weight
@@ -524,9 +558,11 @@ def compile_model(model, input_shape: tuple[int, ...] | None = None, *,
     plan; backend/interpret/tiling stay dynamic through the registry.
 
     ``mesh`` (with a ``model`` axis, optionally a ``data`` axis) runs the
-    channel-parallel placement pass (DESIGN.md §9) and bakes the mesh into
-    the plan: ICP vs OCP per conv stage from channel counts, overridable
-    via ``ExecPolicy.channel_parallel``.
+    channel-parallel placement pass (DESIGN.md §9/§15) and bakes the mesh
+    into the plan: an icp × ocp model-axis split per conv stage from the
+    stage's arithmetic intensity (pure ICP, pure OCP, composed, or
+    replicated when nothing divides), overridable via
+    ``ExecPolicy.channel_parallel``; batches scatter over ``data``.
 
     ``autotune=True`` (or ``ExecPolicy.autotune``) defers to DESIGN.md
     §10: ``plan.bind`` measures tile candidates per stage (tuning-cache

@@ -32,8 +32,9 @@ The plan is ``bind``-ed to the params at engine construction: weight
 quantization (int8 scales, Qm.n snapping) is folded once — the serving
 analogue of flashing the bitstream before traffic arrives. With
 ``VisionEngineConfig.mesh`` the plan is additionally compiled
-channel-parallel (ICP/OCP per conv stage, DESIGN.md §9) and the bind
-places each stage's weights shard-resident. With
+channel-parallel (an icp × ocp split per conv stage, DESIGN.md §9/§15),
+the bind places each stage's weights shard-resident, and serving
+batches scatter over the mesh's ``data`` axis before dispatch. With
 ``VisionEngineConfig.autotune`` each bucket's bind measures tile
 candidates (or takes them from a persisted tuning cache) and bakes the
 winners into the bound plan (DESIGN.md §10) — serving traffic never
@@ -203,8 +204,11 @@ class VisionEngine:
                                       autotune=self.config.autotune)
             bound = plan.bind(self._params)
         if exe is None:
+            from repro.artifact.store import _batch_sharding
             with phase("compile"):
-                exe = aot_compile(lambda x, b=bound: b(x), shape)
+                exe = aot_compile(lambda x, b=bound: b(x), shape,
+                                  sharding=_batch_sharding(bound.plan,
+                                                           shape))
         self._bounds[bucket] = bound
         self._steps[bucket] = exe
         self.plan_source[bucket] = source
@@ -238,6 +242,19 @@ class VisionEngine:
             if b >= k:
                 return b
         return self.buckets[-1]
+
+    def _place_batch(self, batch):
+        """Scatter a bucket-shaped batch over the mesh's ``data`` axis
+        before dispatch (DESIGN.md §15): every bucket is a multiple of
+        the data extent (``_resolve_buckets`` guarantees it), so replicas
+        work on disjoint batch slices and the AOT program — lowered with
+        this exact input sharding — never reshards on entry."""
+        mesh = self.config.mesh
+        if mesh is None or "data" not in getattr(mesh, "axis_names", ()):
+            return jnp.asarray(batch)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sh = NamedSharding(mesh, P("data", *[None] * (batch.ndim - 1)))
+        return jax.device_put(jnp.asarray(batch), sh)
 
     def warm(self) -> None:
         """Make every ladder bucket's program exist now (from artifacts
@@ -283,7 +300,7 @@ class VisionEngine:
                            np.float32)
             batch = np.concatenate([batch, pad])
         logits = np.asarray(jax.device_get(
-            self._steps[bucket](jnp.asarray(batch))))
+            self._steps[bucket](self._place_batch(batch))))
         for i, uid in enumerate(uids):
             self.results[uid] = {"label": int(logits[i].argmax()),
                                  "logits": logits[i]}

@@ -185,6 +185,69 @@ class TestVerifyPlan:
                  verify_plan(bad, raise_on_violation=False)]
         assert "shard-divisibility" in codes
 
+    def test_2d_factorization_mismatch_named(self):
+        """Explicit icp x ocp factors that don't cover the model axis."""
+        plan = _model().compile()
+        conv1 = next(n for n in plan.graph
+                     if isinstance(n, FusedConvBlockNode))
+        bad = _replace_node(plan, conv1,
+                            sharding=ShardingSpec(mode="both", data=False,
+                                                  icp=2, ocp=2))
+        bad = dataclasses.replace(bad, mesh=types.SimpleNamespace(
+            axis_names=("model",), shape={"model": 2},
+            devices=np.zeros((2,))))
+        codes = [v.code for v in
+                 verify_plan(bad, raise_on_violation=False)]
+        assert "shard-factorization" in codes
+
+    def test_2d_both_axis_divisibility_named(self):
+        """A 'both' split must divide N by icp AND M by ocp — conv1
+        (M=15, N=1) at icp=2 x ocp=2 violates both sides."""
+        plan = _model().compile()
+        conv1 = next(n for n in plan.graph
+                     if isinstance(n, FusedConvBlockNode))
+        bad = _replace_node(plan, conv1,
+                            sharding=ShardingSpec(mode="both", data=False,
+                                                  icp=2, ocp=2))
+        bad = dataclasses.replace(bad, mesh=types.SimpleNamespace(
+            axis_names=("model",), shape={"model": 4},
+            devices=np.zeros((4,))))
+        violations = verify_plan(bad, raise_on_violation=False)
+        div = [v for v in violations if v.code == "shard-divisibility"]
+        assert len(div) == 2, violations
+        assert any("Eq. 7/ICP" in v.message for v in div)
+        assert any("Eq. 6/OCP" in v.message for v in div)
+
+    def test_pure_data_stage_with_model_factors_named(self):
+        """mode=none with leftover icp/ocp factors claims a collective
+        the executor never runs — rejected even without a mesh."""
+        plan = _model().compile()
+        conv1 = next(n for n in plan.graph
+                     if isinstance(n, FusedConvBlockNode))
+        bad = _replace_node(plan, conv1,
+                            sharding=ShardingSpec(mode="none", icp=2,
+                                                  ocp=1))
+        codes = [v.code for v in
+                 verify_plan(bad, raise_on_violation=False)]
+        assert "shard-pure-data-collective" in codes
+
+    def test_gather_moving_batch_axis_named(self):
+        """A model-sharded stage with data=False feeding the flatten on a
+        mesh WITH a data axis: the gather would reshard the batch dim,
+        not just all-gather the model axis."""
+        plan = _model().compile()
+        conv2 = [n for n in plan.graph
+                 if isinstance(n, FusedConvBlockNode)][-1]
+        bad = _replace_node(plan, conv2,
+                            sharding=ShardingSpec(mode="output",
+                                                  data=False))
+        bad = dataclasses.replace(bad, mesh=types.SimpleNamespace(
+            axis_names=("data", "model"), shape={"data": 2, "model": 5},
+            devices=np.zeros((2, 5))))
+        codes = [v.code for v in
+                 verify_plan(bad, raise_on_violation=False)]
+        assert "shard-gather-axis" in codes
+
     def test_sharded_stage_without_mesh_named(self):
         plan = _model().compile()
         conv1 = next(n for n in plan.graph

@@ -288,6 +288,105 @@ class TestServingBoot:
         assert engine.plan_source[2] == "fresh"
 
 
+class TestShardedArtifacts:
+    """2-D-placed plan artifacts (DESIGN.md §15): save/load roundtrips of
+    composed icp x ocp placements stay bitwise-equal, and the fingerprint
+    separates mesh shapes. Subprocess-based: the meshes need forced host
+    devices."""
+
+    @staticmethod
+    def _run(code: str, devices: int = 4) -> str:
+        import textwrap
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, timeout=900,
+                             env=env)
+        assert res.returncode == 0, res.stdout + "\n" + res.stderr
+        return res.stdout
+
+    _PREAMBLE = """
+    import tempfile, jax, jax.numpy as jnp, numpy as np
+    jax.config.update("jax_default_matmul_precision", "float32")
+    from jax.sharding import Mesh
+    from repro.graph import BoundPlan
+    from repro.models.cnn import PaperCNN, PaperCNNConfig
+    from repro.ops import ExecPolicy
+
+    def lattice(key, shape, frac=6, maxcode=31):
+        c = jax.random.randint(key, shape, -maxcode, maxcode + 1)
+        v = c.astype(jnp.float32) * (2.0 ** -frac)
+        flat = v.reshape(-1).at[0].set(127 * 2.0 ** -frac)
+        return flat.reshape(shape)
+
+    def lattice_tree(tree):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return jax.tree_util.tree_unflatten(treedef, [
+            lattice(jax.random.PRNGKey(i + 100), l.shape)
+            for i, l in enumerate(leaves)])
+
+    MODEL = PaperCNN(PaperCNNConfig(conv1_c=16, conv2_c=8))
+    PARAMS = lattice_tree(MODEL.init(jax.random.PRNGKey(0)))
+    X = lattice(jax.random.PRNGKey(9), (4, 1, 28, 28))
+
+    def mesh_of(data, model):
+        devs = np.asarray(jax.devices()[: data * model])
+        return Mesh(devs.reshape(data, model), ("data", "model"))
+    """
+
+    def test_2d_placed_roundtrip_bitwise(self):
+        """A mesh-4 plan (conv2 lands on the composed icp2 x ocp2 split)
+        saved and loaded serves bitwise-identically — through both the
+        restored bound plan and the AOT program."""
+        self._run(self._PREAMBLE + """
+    for quant in ("none", "qformat", "int8"):
+        pol = ExecPolicy(quant=quant)
+        ub = MODEL.compile(policy=pol, batch=4).bind(PARAMS)
+        want = np.asarray(ub(X))
+        # The AOT rung is one fused XLA program; under int8 its fused
+        # requant arithmetic rounds once where the per-op path rounds
+        # twice, so the jitted unsharded plan is the like-for-like
+        # reference for the jitted sharded one.
+        want_jit = np.asarray(jax.jit(lambda x: ub(x))(X))
+        plan = MODEL.compile(policy=pol, batch=4, mesh=mesh_of(1, 4))
+        modes = {n.sharding.mode for n in plan.graph
+                 if getattr(n, "sharding", None) is not None}
+        assert "both" in modes, modes
+        bound = plan.bind(PARAMS)
+        with tempfile.TemporaryDirectory() as d:
+            bound.save(d + "/p")
+            loaded = BoundPlan.load(d + "/p", params=PARAMS)
+            got = np.asarray(loaded(X))
+            assert np.array_equal(got, want), (quant,
+                                               np.abs(got - want).max())
+            from repro.artifact.store import load_plan
+            art = load_plan(d + "/p")
+            exe = art.program(X.shape)
+            got2 = np.asarray(jax.device_get(exe(X)))
+            assert np.array_equal(got2, want_jit), (
+                quant, np.abs(got2 - want_jit).max())
+    print("OK")
+    """)
+
+    def test_mesh_shape_changes_fingerprint(self):
+        """2x1 vs 1x2 vs 2x2 (data x model) are different programs and
+        must never share an artifact identity."""
+        out = self._run(self._PREAMBLE + """
+    pol = ExecPolicy(quant="none")
+    fps = set()
+    for data, model in ((2, 1), (1, 2), (2, 2)):
+        bound = MODEL.compile(policy=pol, batch=4,
+                              mesh=mesh_of(data, model)).bind(PARAMS)
+        fps.add(bound.fingerprint())
+    fps.add(MODEL.compile(policy=pol, batch=4).bind(PARAMS).fingerprint())
+    print(len(fps))
+    """)
+        assert out.strip() == "4"
+
+
 class TestWarmupReport:
     def test_phase_attribution(self):
         with collect_warmup() as rep:

@@ -56,7 +56,8 @@ def lattice_tree(tree):
         lattice(jax.random.PRNGKey(i + 100), l.shape)
         for i, l in enumerate(leaves)])
 
-# conv1: M=16, N=1 -> OCP everywhere; conv2: M=8, N=16 -> ICP everywhere
+# conv1: M=16, N=1 -> OCP everywhere; conv2: M=8, N=16 -> ICP at mesh 2,
+# the composed icp2 x ocp2 split at mesh 4
 CFG = PaperCNNConfig(conv1_c=16, conv2_c=8)
 MODEL = PaperCNN(CFG)
 PARAMS = lattice_tree(MODEL.init(jax.random.PRNGKey(0)))
@@ -297,12 +298,39 @@ class TestPlacementPass:
 
     def test_auto_rule_ocp_when_m_wide_else_icp(self):
         from repro.graph import place_channel_parallel
-        # conv1 (M=16, N=1): OCP; conv2 (M=8, N=16): 8 < 16*2 -> ICP
+        # conv1 (M=16, N=1): N is unsplittable -> OCP; conv2 (M=8, N=16):
+        # ICP halves the window stream for an 8x8-buffer ring -> ICP
         g = place_channel_parallel(self._graph(), 2)
         assert self._modes(g) == ["output", "input"]
-        # widen conv2's M so M >= N*mesh flips it to OCP
-        g = place_channel_parallel(self._graph(conv2_c=32), 2)
+        # widen conv2's M until the ring payload (M x 8x8 partials)
+        # outweighs the window-stream halving -> cost model flips to OCP
+        g = place_channel_parallel(self._graph(conv2_c=256), 2)
         assert self._modes(g) == ["output", "output"]
+
+    def test_auto_rule_2d_split_at_mesh4(self):
+        """At mesh=4 the model axis factors: conv1 (N=1) stays pure OCP,
+        conv2 (M=8, N=16) lands on the composed icp2 x ocp2 split — the
+        ring stays short while the window stream still halves."""
+        from repro.graph import place_channel_parallel
+        g = place_channel_parallel(self._graph(), 4)
+        assert self._modes(g) == ["output", "both"]
+        specs = [n.sharding for n in g
+                 if getattr(n, "sharding", None) is not None]
+        assert (specs[0].icp, specs[0].ocp) == (1, 4)
+        assert (specs[1].icp, specs[1].ocp) == (2, 2)
+        assert str(specs[1]) == "icp2xocp2"
+
+    def test_auto_rule_pure_data_when_nothing_divides(self):
+        """Channels (15, 20) at mesh 8: conv2 can shard neither N=15 nor
+        M=20 by 8, and no mixed factorization divides both — the stage
+        falls back to pure data parallelism, never an invalid plan."""
+        from repro.graph import place_channel_parallel
+        g = place_channel_parallel(self._graph(15, 20), 8)
+        assert self._modes(g) == ["none", "none"]
+        for n in g:
+            if getattr(n, "sharding", None) is not None:
+                assert n.sharding.split(8) == (1, 1)
+                assert n.sharding.data
 
     def test_auto_rule_falls_through_on_divisibility(self):
         from repro.graph import place_channel_parallel
